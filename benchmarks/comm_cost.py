@@ -1,0 +1,73 @@
+"""Paper Tables I-III, 'Size' column: per-epoch communication volume of
+SGD / PowerSGD / TopK-SGD / LQ-SGD on ResNet-18.
+
+Exact reproduction of the paper's accounting: wire bits per step come from
+the REAL ResNet-18 gradient pytree through each compressor's
+``wire_bits_per_step`` (the same code the distributed step runs), times the
+paper's steps-per-epoch (5 workers x batch 128 -> 79 steps on 50k images,
+97 on 60k MNIST). Validated against the paper's reported MBs in tests.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import CompressorConfig, make_compressor
+from repro.models.resnet import init_resnet18
+
+DATASETS = {
+    # name: (train_size, n_classes)
+    "CIFAR-10": (50_000, 10),
+    "CIFAR-100": (50_000, 100),
+    "MNIST": (60_000, 10),
+}
+GLOBAL_BATCH = 5 * 128  # paper: 5 workers, standard per-worker batch 128
+
+
+def steps_per_epoch(n: int) -> int:
+    return -(-n // GLOBAL_BATCH)
+
+
+def comm_table(rank: int = 1, bits: int = 8, topk_ratio: float | None = None):
+    """Returns {dataset: {method: MB_per_epoch}}."""
+    rows = {}
+    for ds, (n, classes) in DATASETS.items():
+        abstract = jax.eval_shape(
+            lambda: init_resnet18(jax.random.PRNGKey(0), n_classes=classes))
+        methods = {
+            "sgd": CompressorConfig(name="none"),
+            "powersgd": CompressorConfig(name="powersgd", rank=rank),
+            "lq_sgd": CompressorConfig(name="lq_sgd", rank=rank, bits=bits),
+        }
+        # TopK at a ratio matching PowerSGD's compression (paper footnote)
+        ps = make_compressor(methods["powersgd"], abstract)
+        none = make_compressor(methods["sgd"], abstract)
+        ratio = (topk_ratio if topk_ratio is not None
+                 else ps.wire_bits_per_step() / none.wire_bits_per_step() / 2)
+        methods["topk"] = CompressorConfig(name="topk", topk_ratio=ratio)
+        spe = steps_per_epoch(n)
+        row = {}
+        for m, cc in methods.items():
+            comp = make_compressor(cc, abstract)
+            row[m] = comp.wire_bits_per_step() / 8e6 * spe
+        rows[ds] = row
+    return rows
+
+
+def run() -> list[tuple[str, float, str]]:
+    out = []
+    table = comm_table()
+    paper = {  # paper-reported MB/epoch (Tables I-III)
+        "CIFAR-10": {"sgd": 3325, "powersgd": 14, "topk": 14, "lq_sgd": 3},
+        "CIFAR-100": {"sgd": 3339, "powersgd": 14, "topk": 14, "lq_sgd": 3},
+        "MNIST": {"sgd": 3964, "powersgd": 16, "topk": 16, "lq_sgd": 4},
+    }
+    for ds, row in table.items():
+        for m, mb in row.items():
+            out.append((f"comm_cost/{ds}/{m}",
+                        mb, f"paper={paper[ds][m]}MB ours={mb:.1f}MB"))
+    return out
+
+
+if __name__ == "__main__":
+    for name, val, extra in run():
+        print(f"{name},{val:.2f},{extra}")

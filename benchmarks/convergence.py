@@ -1,0 +1,120 @@
+"""Paper Figs. 1-3 (+Tables I-III accuracy/time columns), reduced scale:
+convergence of SGD / PowerSGD / TopK / LQ-SGD at several ranks on the
+synthetic CIFAR stand-in, with exact N-worker collective semantics
+(vmap named axis = same code path as the production shard_map).
+
+Also ablates the beyond-paper `avg_mode="dequant_then_mean"` (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import AxisComm, CompressorConfig, make_compressor
+from repro.data.synthetic import ImageDataConfig, image_batch
+from repro.models.common import KeyGen
+from repro.models.resnet import init_resnet18, resnet18_forward
+
+N_WORKERS = 4
+
+
+def _init_cnn(key, n_classes=10):
+    """4-conv mini-net: CPU-budget stand-in for ResNet-18 in the
+    convergence FIGURES (Figs 1-3 compare methods' relative curves; the
+    full ResNet-18 runs in examples/resnet_cifar_compression.py and the
+    comm tables use the real ResNet-18 shapes)."""
+    kg = KeyGen(key)
+    r = lambda *s_: jax.random.normal(kg(), s_) * (2.0 / (s_[0]*s_[1]*s_[2])) ** 0.5         if len(s_) == 4 else jax.random.normal(kg(), s_) * 0.05
+    return {"c1": r(3, 3, 3, 16), "c2": r(3, 3, 16, 32),
+            "c3": r(3, 3, 32, 64), "w": r(64, n_classes),
+            "b": jnp.zeros((n_classes,))}
+
+
+def _cnn(p, x):
+    conv = lambda h, w, s_: jax.lax.conv_general_dilated(
+        h, w, (s_, s_), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    h = jax.nn.relu(conv(x, p["c1"], 2))
+    h = jax.nn.relu(conv(h, p["c2"], 2))
+    h = jax.nn.relu(conv(h, p["c3"], 2))
+    return jnp.mean(h, axis=(1, 2)) @ p["w"] + p["b"]
+
+
+def _loss_fn(params, images, labels):
+    logits = _cnn(params, images)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(logp[jnp.arange(labels.shape[0]), labels])
+
+
+def _accuracy(params, images, labels):
+    logits = _cnn(params, images)
+    return jnp.mean(jnp.argmax(logits, -1) == labels)
+
+
+def train_one(comp_cfg: CompressorConfig, steps: int = 60, lr: float = 0.05,
+              seed: int = 0, full_resnet: bool = False):
+    """Returns (final train acc on fresh batch, losses, secs/step)."""
+    global _cnn
+    data_cfg = ImageDataConfig(batch=32 * N_WORKERS, hw=16, seed=seed)
+    if full_resnet:
+        _cnn_saved = _cnn
+        _cnn = resnet18_forward
+        params = init_resnet18(jax.random.PRNGKey(seed), n_classes=10)
+    else:
+        params = _init_cnn(jax.random.PRNGKey(seed))
+    abstract = jax.eval_shape(lambda: params)
+    comp = make_compressor(comp_cfg, abstract)
+    state = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (N_WORKERS,) + x.shape),
+                         comp.init_state(jax.random.PRNGKey(7)))
+
+    def worker(params, comp_state, images, labels):
+        loss, g = jax.value_and_grad(_loss_fn)(params, images, labels)
+        g, comp_state, _ = comp.sync(g, comp_state, AxisComm(("data",)))
+        params = jax.tree.map(lambda w, gg: w - lr * gg, params, g)
+        return params, comp_state, jax.lax.pmean(loss, "data")
+
+    vworker = jax.jit(jax.vmap(worker, axis_name="data",
+                               in_axes=(None, 0, 0, 0), out_axes=(None, 0, None)))
+    # NOTE: out_axes=None for params asserts worker-identical updates — the
+    # distributed-correctness invariant, enforced every step by vmap itself.
+
+    losses = []
+    t0 = time.time()
+    for step in range(steps):
+        b = image_batch(data_cfg, step)
+        imgs = b["images"].reshape(N_WORKERS, -1, *b["images"].shape[1:])
+        lbls = b["labels"].reshape(N_WORKERS, -1)
+        params, state, loss = vworker(params, state, imgs, lbls)
+        losses.append(float(loss))
+    secs = (time.time() - t0) / steps
+    b = image_batch(data_cfg, 10_000)
+    acc = float(_accuracy(params, b["images"], b["labels"]))
+    if full_resnet:
+        _cnn = _cnn_saved
+    return acc, losses, secs
+
+
+def run(steps: int = 60) -> list[tuple[str, float, str]]:
+    out = []
+    methods = {
+        "sgd": CompressorConfig(name="none"),
+        "powersgd_r1": CompressorConfig(name="powersgd", rank=1),
+        "topk": CompressorConfig(name="topk", topk_ratio=0.01),
+        "lq_sgd_r1": CompressorConfig(name="lq_sgd", rank=1, bits=8),
+        "lq_sgd_r2": CompressorConfig(name="lq_sgd", rank=2, bits=8),
+        "lq_sgd_r4": CompressorConfig(name="lq_sgd", rank=4, bits=8),
+        "lq_sgd_r1_meanfix": CompressorConfig(name="lq_sgd", rank=1, bits=8,
+                                              avg_mode="dequant_then_mean"),
+        "lq_sgd_r1_b4": CompressorConfig(name="lq_sgd", rank=1, bits=4),
+    }
+    for name, cc in methods.items():
+        acc, losses, secs = train_one(cc, steps=steps)
+        out.append((f"convergence/{name}", secs * 1e6,
+                    f"acc={acc:.3f} loss0={losses[0]:.3f} lossT={losses[-1]:.3f}"))
+    return out
+
+
+if __name__ == "__main__":
+    for name, val, extra in run():
+        print(f"{name},{val:.0f},{extra}")

@@ -1,0 +1,54 @@
+"""Benchmark driver — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints ``name,us_per_call,derived`` CSV (scaffold contract):
+  * comm_cost     -> paper Tables I-III 'Size' column (exact wire accounting)
+  * convergence   -> paper Figs. 1-3 / accuracy+time columns (reduced scale)
+  * gia_ssim      -> paper Fig. 5 (SSIM under gradient inversion)
+  * quant_kernel  -> §IV-C quantization-overhead claim + kernel parity
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer steps (CI-speed)")
+    ap.add_argument("--only", default=None,
+                    choices=["comm_cost", "convergence", "gia_ssim",
+                             "quant_kernel"])
+    args = ap.parse_args()
+
+    from benchmarks import comm_cost, convergence, gia_ssim, quant_kernel
+
+    sections = {
+        "comm_cost": lambda: comm_cost.run(),
+        "quant_kernel": lambda: quant_kernel.run(),
+        "convergence": lambda: convergence.run(steps=20 if args.quick else 60),
+        "gia_ssim": lambda: gia_ssim.run(steps=120 if args.quick else 300),
+    }
+    if args.only:
+        sections = {args.only: sections[args.only]}
+
+    print("name,us_per_call,derived")
+    ok = True
+    for sec, fn in sections.items():
+        t0 = time.time()
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception as e:  # pragma: no cover
+            ok = False
+            print(f"{sec},nan,ERROR:{e!r}", flush=True)
+        print(f"# {sec} done in {time.time()-t0:.1f}s", flush=True)
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Gradient-inversion demo (paper §V-C): reconstruct a training image from
+the shared gradient, with and without LQ-SGD compression; saves the images
+as .npy and prints SSIM.
+
+    PYTHONPATH=src python examples/gia_demo.py
+"""
+import os
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."))
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.gia_ssim import _grad_fn, _init_net, _target_image
+from repro.core import CompressorConfig, make_compressor
+from repro.core.privacy import GIAConfig, invert_gradients, observed_gradient, ssim
+
+
+def main():
+    os.makedirs("experiments/gia", exist_ok=True)
+    params = _init_net(jax.random.PRNGKey(0))
+    img = _target_image()
+    y = jnp.array([3])
+    gcfg = GIAConfig(steps=300, lr=0.05, tv_coef=5e-3)
+
+    g_raw = _grad_fn(params, img, y)
+    x_sgd, _ = invert_gradients(_grad_fn, params, g_raw, img.shape, y,
+                                jax.random.PRNGKey(7), gcfg)
+
+    comp = make_compressor(CompressorConfig(name="lq_sgd", rank=1, bits=8),
+                           jax.eval_shape(lambda: g_raw))
+    g_lq = observed_gradient(_grad_fn, params, img, y, comp,
+                             comp.init_state(jax.random.PRNGKey(1)))
+    x_lq, _ = invert_gradients(_grad_fn, params, g_lq, img.shape, y,
+                               jax.random.PRNGKey(7), gcfg)
+
+    np.save("experiments/gia/original.npy", np.asarray(img))
+    np.save("experiments/gia/reconstructed_sgd.npy", np.asarray(x_sgd))
+    np.save("experiments/gia/reconstructed_lq_sgd.npy", np.asarray(x_lq))
+    s_sgd, s_lq = float(ssim(img, x_sgd)), float(ssim(img, x_lq))
+    print(f"SSIM of reconstruction — raw SGD gradient:   {s_sgd:.4f}")
+    print(f"SSIM of reconstruction — LQ-SGD gradient:    {s_lq:.4f}")
+    print("lower = less leakage; compression protects" if s_lq < s_sgd
+          else "unexpected: compression did not reduce leakage")
+    print("images saved under experiments/gia/*.npy")
+
+
+if __name__ == "__main__":
+    main()

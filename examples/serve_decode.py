@@ -1,0 +1,59 @@
+"""Serving example: batched prefill + autoregressive decode with KV caches
+on a simulated (2 data x 4 model) mesh — gemma3-family reduced config with
+its 5:1 local:global sliding-window pattern exercised end to end.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch.mesh import make_mesh
+from repro.models.model import init_params
+from repro.serving.engine import (build_decode_step, build_prefill_step,
+                                  greedy_sample, serve_shardings)
+
+
+def main():
+    mesh = make_mesh((2, 4), ("data", "model"))
+    cfg = get_config("gemma3-1b", smoke=True)
+    batch, prompt_len, gen = 4, 32, 24
+    max_seq = prompt_len + gen
+
+    with jax.set_mesh(mesh):
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        tokens = jax.random.randint(jax.random.PRNGKey(1),
+                                    (batch, prompt_len), 0, cfg.vocab_size)
+        prefill = jax.jit(build_prefill_step(cfg, max_seq,
+                                             cache_dtype=jnp.float32))
+        decode = jax.jit(build_decode_step(cfg), donate_argnums=1)
+
+        t0 = time.time()
+        logits, caches = prefill(params, tokens)
+        jax.block_until_ready(logits)
+        print(f"prefill: {batch} x {prompt_len} tokens in {time.time()-t0:.2f}s")
+
+        out = [greedy_sample(logits)]
+        t0 = time.time()
+        for i in range(gen - 1):
+            logits, caches = decode(params, caches, out[-1],
+                                    jnp.int32(prompt_len + i))
+            out.append(greedy_sample(logits))
+        seq = jnp.concatenate(out, axis=1)
+        jax.block_until_ready(seq)
+        dt = time.time() - t0
+        print(f"decode: {gen} tokens x {batch} seqs in {dt:.2f}s "
+              f"({gen*batch/dt:.1f} tok/s on 1 CPU core)")
+        print("generated ids (seq 0):", jax.device_get(seq[0]).tolist())
+        # consistency: no NaNs, ids in range
+        assert int(seq.min()) >= 0 and int(seq.max()) < cfg.vocab_size
+        print("ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: LQ-SGD distributed-training framework (JAX + Pallas/TPU)."""
+__version__ = "0.1.0"

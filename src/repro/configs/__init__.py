@@ -1,0 +1,54 @@
+"""Config registry: the 10 assigned architectures + input shapes.
+
+``get_config(name)`` -> full assigned config (dry-run only — never allocate);
+``get_config(name, smoke=True)`` -> reduced variant (<=2-ish layers,
+d_model<=256, <=4 experts) used by CPU smoke tests and examples.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (INPUT_SHAPES, InputShape, LayerSpec,
+                                ModelConfig, attn, mamba)
+
+ARCHS = {
+    "mamba2-370m": "repro.configs.mamba2_370m",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "jamba-v0.1-52b": "repro.configs.jamba_v01_52b",
+    "qwen2-72b": "repro.configs.qwen2_72b",
+    "gemma3-1b": "repro.configs.gemma3_1b",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "mistral-nemo-12b": "repro.configs.mistral_nemo_12b",
+    "chameleon-34b": "repro.configs.chameleon_34b",
+    "musicgen-medium": "repro.configs.musicgen_medium",
+    "granite-20b": "repro.configs.granite_20b",
+}
+
+# archs with a sub-quadratic (or windowed) path run long_500k; the rest skip
+# it (full-attention — see DESIGN.md §5).
+LONG_CONTEXT_ARCHS = ("mamba2-370m", "jamba-v0.1-52b", "gemma3-1b",
+                      "mixtral-8x7b")
+
+__all__ = ["ARCHS", "INPUT_SHAPES", "LONG_CONTEXT_ARCHS", "InputShape",
+           "LayerSpec", "ModelConfig", "attn", "mamba", "get_config",
+           "list_archs", "shape_supported"]
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; options: {sorted(ARCHS)}")
+    mod = importlib.import_module(ARCHS[name])
+    cfg = mod.smoke_config() if smoke else mod.config()
+    cfg.validate()
+    return cfg
+
+
+def list_archs() -> list[str]:
+    return sorted(ARCHS)
+
+
+def shape_supported(arch: str, shape: str) -> bool:
+    """long_500k only for sub-quadratic archs (decode is O(window)/O(1))."""
+    if shape == "long_500k":
+        return arch in LONG_CONTEXT_ARCHS
+    return True

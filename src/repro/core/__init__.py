@@ -1,0 +1,27 @@
+"""LQ-SGD core: gradient compression for distributed training (the paper)."""
+from repro.core.comm import AxisComm, CommRecord
+from repro.core.compressors import (
+    CompressorConfig,
+    GradCompressor,
+    NoCompression,
+    QSGDCompressor,
+    TopKCompressor,
+    make_compressor,
+)
+from repro.core.lq_sgd import LQSGDCompressor
+from repro.core.powersgd import PowerSGDCompressor
+from repro.core.quantization import LogQuantConfig
+
+__all__ = [
+    "AxisComm",
+    "CommRecord",
+    "CompressorConfig",
+    "GradCompressor",
+    "NoCompression",
+    "QSGDCompressor",
+    "TopKCompressor",
+    "LQSGDCompressor",
+    "PowerSGDCompressor",
+    "LogQuantConfig",
+    "make_compressor",
+]

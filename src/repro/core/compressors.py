@@ -1,0 +1,307 @@
+"""Gradient-compressor framework + the paper's non-low-rank baselines.
+
+A compressor replaces the data-parallel gradient all-reduce. The API is
+functional (pytree state threaded through the step) so everything jits and
+shard_maps:
+
+    comp  = make_compressor(cfg, abstract_grads, stacked=...)
+    state = comp.init_state(key)                       # E, warm Q, counters
+    g_bar, state, rec = comp.sync(grads, state, comm)  # comm: AxisComm
+
+``sync`` runs *inside* the manual (data, pod) axes of ``jax.shard_map`` —
+or under ``jax.vmap(axis_name=...)`` in tests — and returns the synchronized
+(averaged, possibly lossy-reconstructed) gradients every worker applies.
+
+Per-leaf routing: tensors where low-rank/sparse compression pays off are
+compressed; small/1-D tensors (biases, norms, scalars) take the raw
+``pmean`` path exactly as in PowerSGD's reference implementation ("rank-1
+tensors are aggregated uncompressed").
+
+Stacked tensors: models built with scan-over-layers stack per-layer weights
+as (L, n, m). Marking them ``stacked`` makes compression vmap over L,
+preserving per-layer low-rank structure (equivalent to per-layer PowerSGD in
+an unrolled network).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.comm import AxisComm, CommRecord
+from repro.core.low_rank import matricize_shape
+
+__all__ = [
+    "CompressorConfig",
+    "LeafPlan",
+    "GradCompressor",
+    "NoCompression",
+    "TopKCompressor",
+    "QSGDCompressor",
+    "make_compressor",
+    "build_plans",
+]
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressorConfig:
+    """Config shared by all compressors (subclasses add fields)."""
+
+    name: str = "none"
+    # low-rank options (powersgd / lq_sgd)
+    rank: int = 1
+    # quantization options (lq_sgd / qsgd)
+    bits: int = 8
+    bits_q: int | None = None  # paper allows b_p != b_q; None -> same as bits
+    alpha: float = 10.0
+    # topk options
+    topk_ratio: float = 0.01
+    # routing
+    min_compress_numel: int = 1024
+    # wire modelling: 'allgather_codes' (exact uint8 wire) or 'psum_sim'
+    wire: str = "allgather_codes"
+    # 'paper' = dequant(mean(codes))  [Algorithm 1 literal]
+    # 'dequant_then_mean' = mean(dequant(codes))  [beyond-paper ablation]
+    avg_mode: str = "paper"
+    # fuse all factor payloads into one flat collective (beyond-paper perf)
+    fuse_collectives: bool = False
+    # error-feedback storage dtype ('float32' faithful; 'bfloat16' halves the
+    # dominant per-device state at >=70B scale — beyond-paper, ablated)
+    state_dtype: str = "float32"
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafPlan:
+    """Static per-tensor routing decision (computed once from shapes)."""
+
+    path: str
+    shape: tuple[int, ...]
+    dtype: Any
+    route: str  # 'lowrank' | 'raw'
+    stacked: bool  # leading dim is a scan-layer stack
+    mat_shape: tuple[int, int] | None  # per-instance matricized (n, m)
+    eff_rank: int
+
+
+def _leaf_plan(path: str, leaf, rank: int, min_numel: int, stacked: bool) -> LeafPlan:
+    shape = tuple(leaf.shape)
+    dtype = leaf.dtype
+    inst_shape = shape[1:] if stacked else shape
+    numel = 1
+    for s in shape:
+        numel *= s
+    route = "raw"
+    mat = None
+    eff_rank = 0
+    if len(inst_shape) >= 2 and numel >= min_numel:
+        n, m = matricize_shape(inst_shape)
+        r = min(rank, n, m)
+        if n * m > r * (n + m):  # compression actually pays
+            route, mat, eff_rank = "lowrank", (n, m), r
+    return LeafPlan(path, shape, dtype, route, stacked, mat, eff_rank)
+
+
+def build_plans(abstract_grads: PyTree, rank: int, min_numel: int,
+                stacked: PyTree | None = None) -> tuple[LeafPlan, ...]:
+    """One LeafPlan per flattened leaf, in tree_flatten order."""
+    leaves, treedef = jax.tree_util.tree_flatten(abstract_grads)
+    paths = [jax.tree_util.keystr(kp) for kp, _ in
+             jax.tree_util.tree_flatten_with_path(abstract_grads)[0]]
+    if stacked is None:
+        stacked_leaves = [False] * len(leaves)
+    else:
+        stacked_leaves = jax.tree_util.tree_flatten(stacked)[0]
+        if len(stacked_leaves) != len(leaves):
+            raise ValueError("`stacked` pytree does not match grads structure")
+    return tuple(
+        _leaf_plan(p, l, rank, min_numel, bool(s))
+        for p, l, s in zip(paths, leaves, stacked_leaves)
+    )
+
+
+class GradCompressor:
+    """Base: raw pmean for everything. Subclasses override leaf handling."""
+
+    def __init__(self, cfg: CompressorConfig, abstract_grads: PyTree,
+                 stacked: PyTree | None = None):
+        self.cfg = cfg
+        self.treedef = jax.tree_util.tree_structure(abstract_grads)
+        self.plans = build_plans(abstract_grads, cfg.rank,
+                                 cfg.min_compress_numel, stacked)
+
+    # ---- state -----------------------------------------------------------
+    def init_state(self, key: jax.Array) -> PyTree:
+        return {}
+
+    # ---- the sync op -----------------------------------------------------
+    def sync(self, grads: PyTree, state: PyTree, comm: AxisComm
+             ) -> tuple[PyTree, PyTree, CommRecord]:
+        rec = CommRecord()
+        leaves = jax.tree_util.tree_flatten(grads)[0]
+        out = [self._raw_sync(g, comm, rec) for g in leaves]
+        return jax.tree_util.tree_unflatten(self.treedef, out), state, rec
+
+    # ---- sharding of per-worker state over the tensor-parallel axis ------
+    def state_pspecs(self, state: PyTree, param_pspecs: PyTree, dp_axes):
+        """PartitionSpecs for ``state`` leaves (WITHOUT the leading DP dim —
+        the train step prepends it). Error-feedback tensors mirror their
+        parameter's model-axis sharding; everything else replicates."""
+        from jax.sharding import PartitionSpec as P
+        pspecs_flat = jax.tree_util.tree_flatten(
+            param_pspecs, is_leaf=lambda x: isinstance(x, P))[0]
+
+        def spec_for(path: str, leaf):
+            if "'err'" in path:
+                idx = int(path.split("'err'")[1].split("'")[1])
+                return pspecs_flat[idx]
+            return P(*([None] * leaf.ndim))
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(state)
+        specs = [spec_for(jax.tree_util.keystr(kp), leaf)
+                 for kp, leaf in flat]
+        return jax.tree_util.tree_unflatten(treedef, specs)
+
+    # ---- helpers ---------------------------------------------------------
+    def _raw_sync(self, g: jax.Array, comm: AxisComm, rec: CommRecord) -> jax.Array:
+        rec.add(g.size * 32, 1)  # fp32 wire, ring all-reduce payload ~ numel
+        return comm.pmean(g.astype(jnp.float32)).astype(g.dtype)
+
+    # static accounting for tables -----------------------------------------
+    def wire_bits_per_step(self) -> int:
+        rec = CommRecord()
+        for pl in self.plans:
+            numel = 1
+            for s in pl.shape:
+                numel *= s
+            rec.add(numel * 32)
+        return rec.bits_sent
+
+
+class NoCompression(GradCompressor):
+    """Vanilla distributed SGD: full-precision all-reduce (paper 'Original SGD')."""
+
+
+class TopKCompressor(GradCompressor):
+    """TopK-SGD (Shi et al. 2019 / Aji & Heafield 2017) with error feedback.
+
+    Per compressed tensor: keep the top-k entries by magnitude of the
+    error-corrected gradient, zero the rest; the dense masked tensor is
+    pmean'd (the standard dense simulation of sparse all-reduce) while wire
+    accounting charges k * (32-bit value + 32-bit index) per worker.
+    """
+
+    def init_state(self, key: jax.Array) -> PyTree:
+        errs = {}
+        for i, pl in enumerate(self.plans):
+            if pl.route == "lowrank":  # reuse routing: 'compressible'
+                errs[str(i)] = jnp.zeros(pl.shape, jnp.float32)
+        return {"err": errs}
+
+    def _k(self, numel: int) -> int:
+        return max(1, int(numel * self.cfg.topk_ratio))
+
+    def sync(self, grads, state, comm):
+        rec = CommRecord()
+        leaves = jax.tree_util.tree_flatten(grads)[0]
+        new_err = dict(state["err"])
+        out = []
+        for i, (g, pl) in enumerate(zip(leaves, self.plans)):
+            if pl.route != "lowrank":
+                out.append(self._raw_sync(g, comm, rec))
+                continue
+            e = state["err"][str(i)]
+            g32 = g.astype(jnp.float32) + e
+            flat = g32.reshape(-1)
+            k = self._k(flat.size)
+            vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+            mask = jnp.zeros_like(flat).at[idx].set(1.0)
+            kept = flat * mask
+            new_err[str(i)] = (flat - kept).reshape(pl.shape)
+            rec.add(k * 64, 1)  # (value, index) pairs on the wire
+            synced = comm.pmean(kept).reshape(pl.shape)
+            out.append(synced.astype(g.dtype))
+        return (jax.tree_util.tree_unflatten(self.treedef, out),
+                {"err": new_err}, rec)
+
+    def wire_bits_per_step(self) -> int:
+        rec = CommRecord()
+        for pl in self.plans:
+            numel = 1
+            for s in pl.shape:
+                numel *= s
+            if pl.route == "lowrank":
+                rec.add(self._k(numel) * 64)
+            else:
+                rec.add(numel * 32)
+        return rec.bits_sent
+
+
+class QSGDCompressor(GradCompressor):
+    """QSGD (Alistarh et al. 2017): stochastic uniform quantization, s levels.
+
+    Included as an extra quantization baseline (the paper cites it as the
+    canonical uniform scheme that log-quantization improves upon for
+    heavy-tailed gradients).
+    """
+
+    def init_state(self, key: jax.Array) -> PyTree:
+        return {"key": key, "step": jnp.zeros((), jnp.int32)}
+
+    def sync(self, grads, state, comm):
+        rec = CommRecord()
+        cfg = self.cfg
+        s_levels = (1 << (cfg.bits - 1)) - 1
+        leaves = jax.tree_util.tree_flatten(grads)[0]
+        base = jax.random.fold_in(state["key"], state["step"])
+        # independent stochastic rounding per worker
+        base = jax.random.fold_in(base, jax.lax.axis_index(comm.axis_names[-1]))
+        out = []
+        for i, (g, pl) in enumerate(zip(leaves, self.plans)):
+            if pl.route != "lowrank":
+                out.append(self._raw_sync(g, comm, rec))
+                continue
+            g32 = g.astype(jnp.float32)
+            scale = comm.pmax(jnp.max(jnp.abs(g32)))
+            scale = jnp.where(scale > 0, scale, 1.0)
+            y = jnp.abs(g32) / scale * s_levels
+            lo = jnp.floor(y)
+            key = jax.random.fold_in(base, i)
+            p = y - lo
+            rnd = jax.random.uniform(key, g32.shape)
+            q = (lo + (rnd < p)) * jnp.sign(g32)  # in [-s, s]
+            rec.add(g32.size * cfg.bits + 32, 1)
+            synced = comm.pmean(q) * scale / s_levels
+            out.append(synced.astype(g.dtype))
+        return jax.tree_util.tree_unflatten(self.treedef, out), state, rec
+
+    def wire_bits_per_step(self) -> int:
+        rec = CommRecord()
+        for pl in self.plans:
+            numel = 1
+            for s in pl.shape:
+                numel *= s
+            rec.add(numel * (self.cfg.bits if pl.route == "lowrank" else 32))
+        return rec.bits_sent
+
+
+def make_compressor(cfg: CompressorConfig, abstract_grads: PyTree,
+                    stacked: PyTree | None = None) -> GradCompressor:
+    # local imports avoid a cycle (powersgd/lq_sgd import this module)
+    from repro.core.powersgd import PowerSGDCompressor
+    from repro.core.lq_sgd import LQSGDCompressor
+
+    registry: dict[str, Callable[..., GradCompressor]] = {
+        "none": NoCompression,
+        "sgd": NoCompression,
+        "topk": TopKCompressor,
+        "qsgd": QSGDCompressor,
+        "powersgd": PowerSGDCompressor,
+        "lq_sgd": LQSGDCompressor,
+    }
+    if cfg.name not in registry:
+        raise ValueError(f"unknown compressor {cfg.name!r}; options: {sorted(registry)}")
+    return registry[cfg.name](cfg, abstract_grads, stacked)

@@ -1,0 +1,61 @@
+"""Low-rank power-iteration machinery shared by PowerSGD and LQ-SGD.
+
+Implements the single warm-started power-iteration step of PowerSGD
+(Vogels et al., 2019) that the paper's Algorithm 1 reuses:
+
+    P = G' Q ;  P <- orthonormalize(P) ;  Q = G'^T P ;  G_hat = P Q^T
+
+Gradient tensors of ndim != 2 are *matricized*: conv kernels
+(kh, kw, cin, cout) -> (kh*kw*cin, cout), stacked scan-layer params
+(L, a, b) -> compressed per-layer via vmap (keeping per-layer low-rank
+structure, which is what per-layer PowerSGD does in a non-scanned network).
+1-D tensors (biases, norms) take the uncompressed path in the compressor.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["orthonormalize", "matricize_shape", "power_iter_p", "power_iter_q", "reconstruct"]
+
+
+def orthonormalize(p: jax.Array, eps: float = 1e-8) -> jax.Array:
+    """Gram-Schmidt orthonormalization of the columns of ``p`` (n, r).
+
+    Matches the PowerSGD reference implementation (modified Gram-Schmidt,
+    column-by-column). r is small (<= ~8) so the Python loop unrolls fine.
+    """
+    n, r = p.shape
+    cols = []
+    for i in range(r):
+        col = p[:, i]
+        for prev in cols:
+            col = col - jnp.dot(prev, col) * prev
+        col = col / (jnp.linalg.norm(col) + eps)
+        cols.append(col)
+    return jnp.stack(cols, axis=1)
+
+
+def matricize_shape(shape: tuple[int, ...]) -> tuple[int, int]:
+    """2-D view used for compression: collapse all but the last dim."""
+    if len(shape) < 2:
+        raise ValueError(f"cannot matricize {shape}")
+    n = 1
+    for s in shape[:-1]:
+        n *= s
+    return (n, shape[-1])
+
+
+def power_iter_p(g2d: jax.Array, q: jax.Array) -> jax.Array:
+    """P = G' Q   (before orthonormalization / all-reduce)."""
+    return g2d @ q
+
+
+def power_iter_q(g2d: jax.Array, p_hat: jax.Array) -> jax.Array:
+    """Q = G'^T P_hat."""
+    return g2d.T @ p_hat
+
+
+def reconstruct(p_hat: jax.Array, q_hat: jax.Array) -> jax.Array:
+    """G_hat = P Q^T."""
+    return p_hat @ q_hat.T

@@ -1,0 +1,136 @@
+"""PowerSGD (Vogels et al., NeurIPS 2019) — the paper's primary baseline.
+
+Warm-started single power iteration with error feedback:
+
+    G' = G + E ;  P = G'Q ;  allreduce(P) ;  P^ = orth(P)
+    Q  = G'^T P^ ;  allreduce(Q) ;  G^ = P^ Q^T ;  E = G' - G^
+
+Factors are all-reduced in fp32 (LQ-SGD subclasses this and overrides
+``_factor_allreduce`` with the b-bit log-quantized wire). Stacked (L, n, m)
+tensors are compressed per-layer via vmap — equivalent to per-layer PowerSGD
+in an unrolled network.
+
+Distributed-correctness invariants (tested):
+  * warm-start Q is initialized from the SAME key on every worker, so all
+    workers hold identical Q_t and the linearity mean_i(G_i' Q) = Ḡ' Q makes
+    the P all-reduce exact in expectation;
+  * error feedback E is per-worker (never synchronized);
+  * after sync every worker holds the identical reconstruction G^.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.comm import AxisComm, CommRecord
+from repro.core.compressors import GradCompressor, LeafPlan
+from repro.core.low_rank import orthonormalize
+
+__all__ = ["PowerSGDCompressor"]
+
+PyTree = Any
+
+
+class PowerSGDCompressor(GradCompressor):
+    """Low-rank gradient compression with error feedback + warm start."""
+
+    # ---------------------------------------------------------------- state
+    def init_state(self, key: jax.Array) -> PyTree:
+        err, q = {}, {}
+        edt = jnp.dtype(self.cfg.state_dtype)
+        for i, pl in enumerate(self.plans):
+            if pl.route != "lowrank":
+                continue
+            n, m = pl.mat_shape
+            r = pl.eff_rank
+            k = jax.random.fold_in(key, i)
+            if pl.stacked:
+                L = pl.shape[0]
+                q[str(i)] = jax.random.normal(k, (L, m, r), jnp.float32)
+            else:
+                q[str(i)] = jax.random.normal(k, (m, r), jnp.float32)
+            err[str(i)] = jnp.zeros(pl.shape, edt)
+        return {"err": err, "q": q}
+
+    # ----------------------------------------------------- wire (overridden)
+    def _factor_allreduce(self, x: jax.Array, comm: AxisComm, rec: CommRecord,
+                          bits: int, stacked: bool) -> jax.Array:
+        """fp32 factor all-reduce (PowerSGD wire). Returns the mean factor."""
+        del bits, stacked
+        rec.add(x.size * 32, 1)
+        return comm.pmean(x)
+
+    def _bits_p(self) -> int:
+        return 32
+
+    def _bits_q(self) -> int:
+        return 32
+
+    # ----------------------------------------------------------------- sync
+    def sync(self, grads: PyTree, state: PyTree, comm: AxisComm):
+        rec = CommRecord()
+        leaves = jax.tree_util.tree_flatten(grads)[0]
+        new_err = dict(state["err"])
+        new_q = dict(state["q"])
+        out = []
+        for i, (g, pl) in enumerate(zip(leaves, self.plans)):
+            if pl.route != "lowrank":
+                out.append(self._raw_sync(g, comm, rec))
+                continue
+            si = str(i)
+            g_hat, e, q = self._compress_leaf(
+                g, state["err"][si], state["q"][si], pl, comm, rec)
+            new_err[si], new_q[si] = e, q
+            out.append(g_hat.astype(g.dtype))
+        synced = jax.tree_util.tree_unflatten(self.treedef, out)
+        return synced, {"err": new_err, "q": new_q}, rec
+
+    def _compress_leaf(self, g: jax.Array, err: jax.Array, q: jax.Array,
+                       pl: LeafPlan, comm: AxisComm, rec: CommRecord):
+        n, m = pl.mat_shape
+        if pl.stacked:
+            L = pl.shape[0]
+            g2d = g.astype(jnp.float32).reshape(L, n, m)
+            err2d = err.astype(jnp.float32).reshape(L, n, m)
+            matmul_pq = lambda a, b: jnp.einsum("lnm,lmr->lnr", a, b)
+            matmul_qp = lambda a, b: jnp.einsum("lnm,lnr->lmr", a, b)
+            orth = jax.vmap(orthonormalize)
+            recon = lambda p, qq: jnp.einsum("lnr,lmr->lnm", p, qq)
+        else:
+            g2d = g.astype(jnp.float32).reshape(n, m)
+            err2d = err.astype(jnp.float32).reshape(n, m)
+            matmul_pq = lambda a, b: a @ b
+            matmul_qp = lambda a, b: a.T @ b
+            orth = orthonormalize
+            recon = lambda p, qq: p @ qq.T
+
+        g_ef = g2d + err2d                                   # Alg.1 l.4
+        p = matmul_pq(g_ef, q)                               # Alg.1 l.10
+        p = self._factor_allreduce(p, comm, rec, self._bits_p(), pl.stacked)
+        p_hat = orth(p)                                      # Alg.1 l.11
+        q_new = matmul_qp(g_ef, p_hat)                       # Alg.1 l.15
+        q_new = self._factor_allreduce(q_new, comm, rec, self._bits_q(), pl.stacked)
+        g_hat = recon(p_hat, q_new)                          # Alg.1 l.19
+        e_new = (g_ef - g_hat).reshape(pl.shape)             # Alg.1 l.20
+        e_new = e_new.astype(jnp.dtype(self.cfg.state_dtype))
+        return g_hat.reshape(pl.shape), e_new, q_new
+
+    # ----------------------------------------------------------- accounting
+    def wire_bits_per_step(self) -> int:
+        rec = CommRecord()
+        bp, bq = self._bits_p(), self._bits_q()
+        for pl in self.plans:
+            numel = 1
+            for s in pl.shape:
+                numel *= s
+            if pl.route != "lowrank":
+                rec.add(numel * 32)
+                continue
+            n, m = pl.mat_shape
+            r = pl.eff_rank
+            L = pl.shape[0] if pl.stacked else 1
+            rec.add(L * n * r * bp + (32 * L if bp < 32 else 0))  # P (+ scales)
+            rec.add(L * m * r * bq + (32 * L if bq < 32 else 0))  # Q (+ scales)
+        return rec.bits_sent

@@ -1,0 +1,8 @@
+"""Trustworthiness evaluation: gradient inversion + SSIM (paper §V-C)."""
+from repro.core.privacy.gia import (GIAConfig, cosine_distance,
+                                    invert_gradients, observed_gradient,
+                                    total_variation)
+from repro.core.privacy.ssim import ssim
+
+__all__ = ["GIAConfig", "cosine_distance", "invert_gradients",
+           "observed_gradient", "total_variation", "ssim"]

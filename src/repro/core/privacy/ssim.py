@@ -1,0 +1,51 @@
+"""SSIM (structural similarity) in pure jnp — the paper's privacy metric.
+
+Standard Wang et al. 2004 formulation: 11x11 Gaussian window, sigma 1.5,
+K1=0.01, K2=0.03, averaged over channels and batch. Inputs are dynamically
+range-normalized (reconstructions are unconstrained)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssim"]
+
+
+def _gaussian_kernel(size: int = 11, sigma: float = 1.5) -> jax.Array:
+    g = jnp.arange(size, dtype=jnp.float32) - (size - 1) / 2.0
+    g = jnp.exp(-0.5 * (g / sigma) ** 2)
+    k = jnp.outer(g, g)
+    return k / jnp.sum(k)
+
+
+def _filter(x: jax.Array, kern: jax.Array) -> jax.Array:
+    """Depthwise 2-D filter over (B, H, W, C)."""
+    c = x.shape[-1]
+    k4 = jnp.tile(kern[:, :, None, None], (1, 1, 1, c))
+    return jax.lax.conv_general_dilated(
+        x, k4, (1, 1), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c)
+
+
+def ssim(a: jax.Array, b: jax.Array, *, window: int = 11,
+         sigma: float = 1.5) -> jax.Array:
+    """a, b: (B, H, W, C) -> scalar mean SSIM in [-1, 1]."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    lo = jnp.minimum(a.min(), b.min())
+    hi = jnp.maximum(a.max(), b.max())
+    rng = jnp.maximum(hi - lo, 1e-6)
+    a = (a - lo) / rng
+    b = (b - lo) / rng
+
+    k = _gaussian_kernel(window, sigma)
+    c1, c2 = 0.01 ** 2, 0.03 ** 2
+    mu_a, mu_b = _filter(a, k), _filter(b, k)
+    mu_aa, mu_bb, mu_ab = mu_a * mu_a, mu_b * mu_b, mu_a * mu_b
+    s_aa = _filter(a * a, k) - mu_aa
+    s_bb = _filter(b * b, k) - mu_bb
+    s_ab = _filter(a * b, k) - mu_ab
+    num = (2 * mu_ab + c1) * (2 * s_ab + c2)
+    den = (mu_aa + mu_bb + c1) * (s_aa + s_bb + c2)
+    return jnp.mean(num / den)

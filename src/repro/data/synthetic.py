@@ -1,0 +1,77 @@
+"""Deterministic synthetic datasets (offline container — no downloads).
+
+Both generators produce *learnable* distributions so convergence benchmarks
+show real learning curves:
+
+  * LM tokens: noisy periodic copy process over a zipf unigram base —
+    transformers/SSMs learn the copy structure quickly, losses separate
+    cleanly between compressors.
+  * images: class-conditional Gaussian patterns ("synthetic CIFAR": K class
+    templates + noise), the stand-in for CIFAR-10/100/MNIST in the paper's
+    tables; ResNet-18 reaches high accuracy in a few hundred steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["LMDataConfig", "lm_batch", "ImageDataConfig", "image_batch",
+           "class_templates"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LMDataConfig:
+    vocab_size: int
+    seq_len: int
+    batch: int
+    period: int = 16        # copy period (the learnable structure)
+    noise: float = 0.15     # fraction of corrupted positions
+    n_codebooks: int = 0
+    seed: int = 0
+
+
+def lm_batch(cfg: LMDataConfig, step: int) -> dict[str, jax.Array]:
+    """Deterministic batch for a given step (restart-safe data order)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+    k1, k2, k3 = jax.random.split(key, 3)
+    shape = (cfg.batch, cfg.seq_len)
+    if cfg.n_codebooks:
+        shape = shape + (cfg.n_codebooks,)
+    # zipf-ish base: sample from a skewed categorical
+    ranks = jnp.arange(1, cfg.vocab_size + 1, dtype=jnp.float32)
+    logits = -1.1 * jnp.log(ranks)
+    base = jax.random.categorical(k1, logits, shape=(cfg.batch, cfg.period)
+                                  + ((cfg.n_codebooks,) if cfg.n_codebooks else ()))
+    reps = -(-cfg.seq_len // cfg.period)
+    tok = jnp.tile(base, (1, reps) + ((1,) if cfg.n_codebooks else ()))[:, :cfg.seq_len]
+    corrupt = jax.random.bernoulli(k2, cfg.noise, shape)
+    rand_tok = jax.random.randint(k3, shape, 0, cfg.vocab_size)
+    tokens = jnp.where(corrupt, rand_tok, tok).astype(jnp.int32)
+    return {"tokens": tokens}
+
+
+@dataclasses.dataclass(frozen=True)
+class ImageDataConfig:
+    n_classes: int = 10
+    hw: int = 32
+    channels: int = 3
+    batch: int = 128
+    noise: float = 0.35
+    seed: int = 0
+
+
+def class_templates(cfg: ImageDataConfig) -> jax.Array:
+    """Fixed per-class mean images (the learnable signal)."""
+    key = jax.random.PRNGKey(cfg.seed + 1000)
+    return jax.random.normal(key, (cfg.n_classes, cfg.hw, cfg.hw, cfg.channels))
+
+
+def image_batch(cfg: ImageDataConfig, step: int) -> dict[str, jax.Array]:
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+    k1, k2 = jax.random.split(key)
+    labels = jax.random.randint(k1, (cfg.batch,), 0, cfg.n_classes)
+    mu = class_templates(cfg)[labels]
+    x = mu + cfg.noise * jax.random.normal(k2, mu.shape)
+    return {"images": x, "labels": labels}

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels (+ jnp oracles): log_quant, flash_attention, ssd_chunk.
+
+Each kernel: `pl.pallas_call` + explicit BlockSpec VMEM tiling; `ops.py`
+holds the jit'd dispatch wrappers (pallas | xla), `ref.py` the pure-jnp
+oracles every kernel is allclose-tested against (interpret mode on CPU;
+TPU is the compile target).
+"""
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.log_quant import log_dequantize_pallas, log_quantize_pallas
+from repro.kernels.ssd_chunk import ssd_chunk_pallas
+
+__all__ = ["ops", "ref", "flash_attention_pallas", "log_quantize_pallas",
+           "log_dequantize_pallas", "ssd_chunk_pallas"]

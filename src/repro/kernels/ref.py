@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's tests sweep shapes/dtypes and assert_allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import LogQuantConfig, quantize, dequantize
+
+__all__ = ["log_quantize_ref", "log_dequantize_ref", "attention_ref",
+           "chunked_attention_ref"]
+
+
+def log_quantize_ref(x: jax.Array, scale: jax.Array, bits: int, alpha: float) -> jax.Array:
+    """Normalize by ``scale`` then log-quantize to signed b-bit codes."""
+    cfg = LogQuantConfig(bits=bits, alpha=alpha)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    return quantize(x.astype(jnp.float32) / safe, cfg)
+
+
+def log_dequantize_ref(codes: jax.Array, scale: jax.Array, bits: int, alpha: float) -> jax.Array:
+    cfg = LogQuantConfig(bits=bits, alpha=alpha)
+    return dequantize(codes, cfg) * scale
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int | None = None,
+                  scale: float | None = None) -> jax.Array:
+    """Reference multi-head attention with GQA + causal/sliding-window masks.
+
+    q: (B, Hq, S, D); k, v: (B, Hkv, S, D) with Hq % Hkv == 0.
+    window=w keeps key j for query i iff i - w < j <= i (SWA, causal).
+    """
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0
+    rep = hq // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    sc = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * sc
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= j <= i
+    if window is not None:
+        mask &= j > i - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def chunked_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                          causal: bool = True, window: int | None = None,
+                          scale: float | None = None,
+                          chunk_q: int = 512) -> jax.Array:
+    """Memory-bounded causal attention: lax.scan over query chunks.
+
+    Identical math to ``attention_ref`` (full-row logits per chunk, masked),
+    but peak memory is O(B·H·chunk_q·S) instead of O(B·H·S·S) — the pure-XLA
+    fallback for 32k+ prefill/train when the Pallas flash kernel isn't the
+    selected backend (e.g. the CPU-lowered dry-run). Differentiable.
+    """
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    rep = hq // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    sc = scale if scale is not None else 1.0 / float(d) ** 0.5
+    pad = (-s) % chunk_q
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nq = qp.shape[2] // chunk_q
+    k32 = k.astype(jnp.float32)
+    v32 = v.astype(jnp.float32)
+    kpos = jnp.arange(s)[None, :]
+
+    def one_chunk(ci):
+        qc = jax.lax.dynamic_slice_in_dim(qp, ci * chunk_q, chunk_q, axis=2)
+        logits = jnp.einsum("bhqd,bhkd->bhqk", qc.astype(jnp.float32), k32) * sc
+        qpos = ci * chunk_q + jnp.arange(chunk_q)[:, None]
+        m = jnp.ones((chunk_q, s), bool)
+        if causal:
+            m &= kpos <= qpos
+        if window is not None:
+            m &= kpos > qpos - window
+        logits = jnp.where(m[None, None], logits, -1e30)
+        p = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bhqk,bhkd->bhqd", p, v32)
+
+    chunks = jax.lax.map(one_chunk, jnp.arange(nq))          # (nq,B,H,cq,D)
+    out = jnp.moveaxis(chunks, 0, 2).reshape(b, hq, nq * chunk_q, d)
+    return out[:, :, :s].astype(q.dtype)

@@ -1,0 +1,48 @@
+"""``input_specs()`` — ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, zero allocation: the dry-run lowers against
+these. Stub frontends (DESIGN.md §6) appear here as the embedding/token
+tensors they produce.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+
+__all__ = ["input_specs", "make_concrete_batch"]
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict[str, jax.ShapeDtypeStruct]:
+    b = shape.global_batch
+    i32 = jnp.int32
+    if shape.mode in ("train", "prefill"):
+        s = shape.seq_len
+        tok_shape = (b, s, cfg.n_codebooks) if cfg.n_codebooks else (b, s)
+        specs = {"tokens": jax.ShapeDtypeStruct(tok_shape, i32)}
+        if cfg.cond_len:
+            specs["cond"] = jax.ShapeDtypeStruct(
+                (b, cfg.cond_len, cfg.d_model), jnp.dtype(cfg.dtype))
+        return specs
+    # decode: ONE new token against a seq_len-deep cache
+    tok_shape = (b, 1, cfg.n_codebooks) if cfg.n_codebooks else (b, 1)
+    return {
+        "tokens": jax.ShapeDtypeStruct(tok_shape, i32),
+        "index": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def make_concrete_batch(cfg: ModelConfig, shape: InputShape, key=None):
+    """Tiny-scale concrete version (tests/examples), same structure."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    specs = input_specs(cfg, shape)
+    out = {}
+    for k, sds in specs.items():
+        if sds.dtype == jnp.int32 and k == "tokens":
+            out[k] = jax.random.randint(key, sds.shape, 0, cfg.vocab_size)
+        elif k == "index":
+            out[k] = jnp.zeros((), jnp.int32)
+        else:
+            out[k] = jnp.zeros(sds.shape, sds.dtype)
+    return out

@@ -1,0 +1,123 @@
+"""Parameter/activation sharding policy over the tensor-parallel axis.
+
+Megatron-style: QKV/up/gate column-parallel, O/down row-parallel,
+vocab-parallel embedding & head, expert-parallel MoE (expert dim when
+divisible by the axis size, else FFN dim). DP axes (pod, data) replicate
+parameters — faithful to the paper's data-parallel setting (PowerSGD-family
+compression needs each worker's full local gradient; see DESIGN.md §8).
+
+Rules are path-keyed over the param pytree; stacked (scan) leaves get a
+leading ``None`` for the layer dim. ``spec_tree`` works on abstract shapes
+(ShapeDtypeStruct), so the dry-run never allocates.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["param_specs", "batch_spec", "MODEL_AXIS"]
+
+MODEL_AXIS = "model"
+
+
+def _div(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+def _leaf_spec(path: str, shape: tuple[int, ...], axis: str, size: int,
+               cfg=None) -> P:
+    """Partition rule for one (unstacked) leaf.
+
+    Head-aware: attention projections are sharded over the model axis only
+    when the relevant HEAD COUNT divides the axis size — numeric
+    divisibility of the fused (H*hd) dim is not enough (fractional heads
+    force resharding storms around the (B,S,H,hd) reshapes). Mamba fused
+    projections stay replicated in the baseline (their fused output dim
+    interleaves z/x/B/C/dt segments); head-sharded Mamba TP is a recorded
+    perf iteration (EXPERIMENTS.md §Perf).
+    """
+    nd = len(shape)
+    m = lambda d: _div(shape[d], size)
+    heads_ok = cfg is not None and _div(getattr(cfg, "n_heads", 0), size)
+    kv_ok = cfg is not None and _div(getattr(cfg, "n_kv_heads", 0), size)
+
+    # ---- embeddings / heads ------------------------------------------------
+    if "embed" in path:
+        if nd == 3:   # (codebooks, V, D)
+            return P(None, axis if m(1) else None, None)
+        return P(axis if m(0) else None, None)
+    if "head" in path or "'fc'" in path:
+        if nd == 3:   # (codebooks, D, V)
+            return P(None, None, axis if m(2) else None)
+        if nd == 2:
+            return P(None, axis if m(1) else None)
+        return P(None)
+    # ---- MoE ---------------------------------------------------------------
+    if "router" in path:
+        return P(*([None] * nd))
+    # Expert weights: expert-parallel when E divides the axis. When it does
+    # NOT (mixtral: 8 experts vs 16-way axis), REPLICATE rather than
+    # F-shard: F-sharded experts turn the (B,E,C,D) combine into full-size
+    # cross-shard partial sums (measured 43 GB all-reduce + all-gather per
+    # layer on mixtral prefill_32k), while replicated 8x14k experts cost
+    # only ~2.8 GB/device and keep MoE math shard-local (EXPERIMENTS §Perf).
+    if "w_gate" in path or "w_up" in path:      # (E, D, F)
+        return P(axis, None, None) if m(0) else P(None, None, None)
+    if "w_down" in path:                         # (E, F, D)
+        return P(axis, None, None) if m(0) else P(None, None, None)
+    # ---- attention (head-boundary aware) -------------------------------------
+    if "wq_b" in path or "wkv_b" in path:        # MLA up-proj: (r, H*dim)
+        return P(None, axis if (heads_ok and m(1)) else None)
+    if "wq" in path:
+        return P(None, axis if (heads_ok and m(1)) else None)
+    if "wk" in path or "wv" in path:
+        return P(None, axis if (kv_ok and m(1)) else None)
+    if "wo" in path:                             # row-parallel over heads
+        return P(axis if (heads_ok and m(0)) else None, None)
+    if "bq" in path:
+        return P(axis if (heads_ok and m(0)) else None)
+    if "bk" in path or "bv" in path:
+        return P(axis if (kv_ok and m(0)) else None)
+    # ---- MLA latent down-proj: plain matmul, column-parallel ----------------
+    if "wq_a" in path:
+        return P(None, axis if m(1) else None)
+    if "wkv_a" in path:                          # fused (ckv|rope): replicate
+        return P(*([None] * nd))
+    # ---- mamba: fused projections replicated in the baseline ----------------
+    if any(k in path for k in ("in_proj", "out_proj", "conv_w", "conv_b")):
+        return P(*([None] * nd))
+    # ---- dense MLP -----------------------------------------------------------
+    if "gate" in path or "up" in path:
+        return P(None, axis if m(1) else None)
+    if "down" in path:
+        return P(axis if m(0) else None, None)
+    # ---- everything else (norms, scalars, A_log, D, dt_bias, bn, ...) -------
+    return P(*([None] * nd))
+
+
+def param_specs(abstract_params: Any, stacked: Any | None = None,
+                axis: str = MODEL_AXIS, axis_size: int = 1,
+                cfg: Any | None = None) -> Any:
+    """Pytree of PartitionSpec matching ``abstract_params``."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_params)
+    if stacked is None:
+        stacked_leaves = [False] * len(flat)
+    else:
+        stacked_leaves = jax.tree_util.tree_flatten(stacked)[0]
+    specs = []
+    for (kp, leaf), st in zip(flat, stacked_leaves):
+        path = jax.tree_util.keystr(kp)
+        shape = tuple(leaf.shape)
+        if st:
+            inner = _leaf_spec(path, shape[1:], axis, axis_size, cfg)
+            specs.append(P(None, *inner))
+        else:
+            specs.append(_leaf_spec(path, shape, axis, axis_size, cfg))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_spec(dp_axes: tuple[str, ...], extra_dims: int = 1) -> P:
+    """Tokens (B, S[, cb]) sharded over DP axes on batch."""
+    return P(dp_axes, *([None] * extra_dims))

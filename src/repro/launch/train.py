@@ -1,0 +1,105 @@
+"""Training launcher.
+
+    # single-process CPU run with a simulated 8-device (4 data x 2 model) mesh:
+    REPRO_DEVICES=8 PYTHONPATH=src python -m repro.launch.train \
+        --arch mixtral-8x7b --smoke --compressor lq_sgd --rank 1 --bits 8 \
+        --steps 50 --batch 8 --seq 64
+
+On a real TPU cluster each host runs this module unmodified (jax picks up
+the slice topology); the mesh flags select the production layout.
+"""
+import os
+if os.environ.get("REPRO_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DEVICES"])
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.core import CompressorConfig
+from repro.data.synthetic import LMDataConfig, lm_batch
+from repro.launch.mesh import make_mesh, make_production_mesh
+from repro.models.multimodal import conditioning_stub
+from repro.train.optimizer import make_optimizer
+from repro.train.step import (build_train_step, init_train_state,
+                              make_model_compressor, n_dp_of)
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--optimizer", default="sgd", choices=["sgd", "adam"])
+    ap.add_argument("--compressor", default="lq_sgd",
+                    choices=["none", "topk", "qsgd", "powersgd", "lq_sgd"])
+    ap.add_argument("--rank", type=int, default=1)
+    ap.add_argument("--bits", type=int, default=8)
+    ap.add_argument("--alpha", type=float, default=10.0)
+    ap.add_argument("--wire", default="allgather_codes")
+    ap.add_argument("--avg-mode", default="paper")
+    ap.add_argument("--fuse", action="store_true")
+    ap.add_argument("--comp-dtype", default="float32")
+    ap.add_argument("--mesh", default=None,
+                    help="e.g. '4x2' (data x model); default: all devices on data")
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--ckpt-path", default="checkpoints/state.ckpt")
+    args = ap.parse_args()
+
+    if args.production_mesh:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    elif args.mesh:
+        d, m = (int(x) for x in args.mesh.split("x"))
+        mesh = make_mesh((d, m), ("data", "model"))
+    else:
+        mesh = make_mesh((len(jax.devices()), 1), ("data", "model"))
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    comp_cfg = CompressorConfig(name=args.compressor, rank=args.rank,
+                                bits=args.bits, alpha=args.alpha,
+                                wire=args.wire, avg_mode=args.avg_mode,
+                                fuse_collectives=args.fuse,
+                                state_dtype=args.comp_dtype)
+    compressor = make_model_compressor(cfg, comp_cfg)
+    optimizer = make_optimizer(args.optimizer, args.lr)
+    step_fn, state_sh, batch_sh = build_train_step(
+        cfg, mesh, compressor, optimizer, remat_scan=not args.smoke)
+
+    data_cfg = LMDataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                            batch=args.batch, n_codebooks=cfg.n_codebooks)
+
+    def batch_fn(step: int):
+        b = lm_batch(data_cfg, step)
+        if cfg.cond_len:
+            b["cond"] = conditioning_stub(jax.random.PRNGKey(step), args.batch, cfg)
+        return b
+
+    with jax.set_mesh(mesh):
+        state = init_train_state(cfg, jax.random.PRNGKey(0), optimizer,
+                                 compressor, n_dp_of(mesh))
+        jstep = jax.jit(step_fn, donate_argnums=0)
+        print(f"arch={cfg.name} params={sum(x.size for x in jax.tree.leaves(state['params']))/1e6:.1f}M "
+              f"mesh={dict(mesh.shape)} compressor={args.compressor} "
+              f"wire/step={compressor.wire_bits_per_step()/8e6:.3f}MB "
+              f"(uncompressed={sum(x.size for x in jax.tree.leaves(state['params']))*4/1e6:.1f}MB)")
+        trainer = Trainer(jstep, batch_fn,
+                          TrainerConfig(steps=args.steps,
+                                        log_every=args.log_every,
+                                        ckpt_every=args.ckpt_every,
+                                        ckpt_path=args.ckpt_path))
+        trainer.run(state)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Composable model stack: attention/MLA/MoE/SSD layers + scanned LM."""

@@ -1,0 +1,133 @@
+"""GQA/MQA attention with RoPE, optional sliding window, QK-norm, KV cache.
+
+Layouts: activations (B, S, D); heads materialized as (B, H, S, hd) for the
+attention op. Full-sequence attention dispatches to the flash kernel
+(Pallas) or the jnp reference via ``repro.kernels.ops``; decode attends one
+query against the cache with a length/window mask (the serving engine may
+shard the cache seq dim — the math here is sharding-agnostic).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.kernels import ops
+from repro.models.common import KeyGen, dense_init, rms_norm
+from repro.models.rope import apply_rope, rope_freqs
+
+__all__ = ["init_attn", "attn_forward", "init_attn_cache", "decode_attend"]
+
+Params = dict[str, Any]
+
+
+def init_attn(kg: KeyGen, cfg: ModelConfig) -> Params:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p: Params = {
+        "wq": dense_init(kg(), (d, h * hd)),
+        "wk": dense_init(kg(), (d, hkv * hd)),
+        "wv": dense_init(kg(), (d, hkv * hd)),
+        "wo": dense_init(kg(), (h * hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,))
+        p["bk"] = jnp.zeros((hkv * hd,))
+        p["bv"] = jnp.zeros((hkv * hd,))
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,))
+        p["k_norm"] = jnp.zeros((hd,))
+    return p
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> Params:
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, hkv, max_seq, hd), dtype),
+        "v": jnp.zeros((batch, hkv, max_seq, hd), dtype),
+    }
+
+
+def _qkv(p: Params, x: jax.Array, spec: LayerSpec, cfg: ModelConfig,
+         positions: jax.Array):
+    b, s, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    theta = spec.rope_theta if spec.rope_theta is not None else cfg.rope_theta
+    cos, sin = rope_freqs(positions, hd, theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def decode_attend(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                  index: jax.Array, window: int | None) -> jax.Array:
+    """q (B, H, 1, hd) vs cache (B, Hkv, S, hd); keys j <= index visible."""
+    b, h, _, hd = q.shape
+    hkv = k_cache.shape[1]
+    s = k_cache.shape[2]
+    rep = h // hkv
+    kc = jnp.repeat(k_cache, rep, axis=1) if rep > 1 else k_cache
+    vc = jnp.repeat(v_cache, rep, axis=1) if rep > 1 else v_cache
+    scale = 1.0 / float(hd) ** 0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kc.astype(jnp.float32)) * scale
+    j = jnp.arange(s)
+    mask = j <= index
+    if window is not None:
+        mask &= j > index - window
+    logits = jnp.where(mask[None, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", w, vc.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attn_forward(p: Params, x: jax.Array, spec: LayerSpec, cfg: ModelConfig, *,
+                 positions: jax.Array, cache: Params | None = None,
+                 cache_index: jax.Array | None = None,
+                 backend: str = "xla") -> tuple[jax.Array, Params | None]:
+    """Returns (y, new_cache). cache=None: full-seq (train). cache given &
+    x.shape[1]==1: single-token decode. cache given & longer x: prefill
+    (fills cache[:, :, :S])."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q, k, v = _qkv(p, x, spec, cfg, positions)
+    q = q.transpose(0, 2, 1, 3)  # (B, H, S, hd)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+
+    if cache is not None and s == 1:
+        # -------- decode: append this token's K/V, attend over the cache
+        idx = cache_index
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), idx, axis=2)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), idx, axis=2)
+        out = decode_attend(q, k_cache, v_cache, idx, spec.window)
+        new_cache = {"k": k_cache, "v": v_cache}
+    else:
+        # -------- train / prefill: full causal (windowed) attention
+        out = ops.flash_attention(q, k, v, causal=True, window=spec.window,
+                                  backend=backend)
+        if cache is not None:
+            max_s = cache["k"].shape[2]
+            pad = max_s - s
+            k_cache = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(cache["k"].dtype)
+            v_cache = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(cache["v"].dtype)
+            new_cache = {"k": k_cache, "v": v_cache}
+        else:
+            new_cache = None
+
+    y = out.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    return y @ p["wo"].astype(x.dtype), new_cache

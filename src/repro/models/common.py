@@ -1,0 +1,50 @@
+"""Shared building blocks: norms, initializers, embeddings, activations."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rms_norm", "gated_rms_norm", "dense_init", "embed_init", "act_fn",
+           "KeyGen"]
+
+
+class KeyGen:
+    """Deterministic PRNG key dispenser for parameter init."""
+
+    def __init__(self, key: jax.Array):
+        self._key = key
+        self._n = 0
+
+    def __call__(self) -> jax.Array:
+        self._n += 1
+        return jax.random.fold_in(self._key, self._n)
+
+
+def dense_init(key: jax.Array, shape: tuple[int, ...], in_dim: int | None = None,
+               dtype=jnp.float32) -> jax.Array:
+    """Scaled-normal init (1/sqrt(fan_in))."""
+    fan_in = in_dim if in_dim is not None else shape[0]
+    return (jax.random.normal(key, shape) / jnp.sqrt(fan_in)).astype(dtype)
+
+
+def embed_init(key: jax.Array, shape: tuple[int, ...], dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def gated_rms_norm(x: jax.Array, gate: jax.Array, weight: jax.Array,
+                   eps: float = 1e-5) -> jax.Array:
+    """Mamba-2's norm-before-out_proj: RMSNorm(x * silu(gate))."""
+    return rms_norm(x * jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype),
+                    weight, eps)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]

@@ -1,0 +1,128 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3, arXiv:2412.19437).
+
+Q/KV are down-projected to low-rank latents; only the KV latent (r_kv=512)
+plus a single decoupled-RoPE key (64) are cached. Decode uses the *absorbed*
+formulation — W_UK is folded into the query and W_UV into the output so
+attention runs entirely in latent space (no per-step re-expansion of the
+cache): the TPU-friendly version (two extra small einsums, MXU-dense).
+
+Train/prefill expands K/V per head and reuses the shared flash-attention op
+(V is zero-padded from v_head_dim to the QK head dim for the kernel, then
+the output is sliced back — padding FLOPs noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.kernels import ops
+from repro.models.common import KeyGen, dense_init, rms_norm
+from repro.models.rope import apply_rope, rope_freqs
+
+__all__ = ["init_mla", "mla_forward", "init_mla_cache"]
+
+Params = dict[str, Any]
+
+
+def init_mla(kg: KeyGen, cfg: ModelConfig) -> Params:
+    d, h = cfg.d_model, cfg.n_heads
+    rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rope, vdim = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "wq_a": dense_init(kg(), (d, rq)),
+        "q_a_norm": jnp.zeros((rq,)),
+        "wq_b": dense_init(kg(), (rq, h * (nope + rope))),
+        "wkv_a": dense_init(kg(), (d, rkv + rope)),
+        "kv_a_norm": jnp.zeros((rkv,)),
+        "wkv_b": dense_init(kg(), (rkv, h * (nope + vdim))),
+        "wo": dense_init(kg(), (h * vdim, d)),
+    }
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> Params:
+    return {
+        "ckv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, max_seq, cfg.qk_rope_dim), dtype),
+    }
+
+
+def _latents(p: Params, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
+    """Shared Q path + KV latent computation."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    nope, rope = cfg.qk_nope_dim, cfg.qk_rope_dim
+    cq = rms_norm(x @ p["wq_a"].astype(x.dtype), p["q_a_norm"], cfg.norm_eps)
+    q = (cq @ p["wq_b"].astype(x.dtype)).reshape(b, s, h, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    kv_a = x @ p["wkv_a"].astype(x.dtype)
+    ckv = rms_norm(kv_a[..., :cfg.kv_lora_rank], p["kv_a_norm"], cfg.norm_eps)
+    k_rope = kv_a[..., cfg.kv_lora_rank:]            # (B, S, rope) shared head
+    cos, sin = rope_freqs(positions, rope, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+    return q_nope, q_rope, ckv, k_rope
+
+
+def mla_forward(p: Params, x: jax.Array, spec: LayerSpec, cfg: ModelConfig, *,
+                positions: jax.Array, cache: Params | None = None,
+                cache_index: jax.Array | None = None,
+                backend: str = "xla") -> tuple[jax.Array, Params | None]:
+    b, s, d = x.shape
+    h = cfg.n_heads
+    nope, rope, vdim = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    qk_dim = nope + rope
+    q_nope, q_rope, ckv, k_rope = _latents(p, x, cfg, positions)
+
+    if cache is not None and s == 1:
+        # ---------------- absorbed decode over the latent cache ----------
+        idx = cache_index
+        ckv_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), idx, axis=1)
+        kr_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["krope"], k_rope.astype(cache["krope"].dtype), idx, axis=1)
+        wkv_b = p["wkv_b"].reshape(cfg.kv_lora_rank, h, nope + vdim)
+        w_uk = wkv_b[..., :nope]                      # (rkv, H, nope)
+        w_uv = wkv_b[..., nope:]                      # (rkv, H, vdim)
+        # absorb W_UK into the query: (B,1,H,nope) -> (B,1,H,rkv)
+        q_lat = jnp.einsum("bthn,rhn->bthr", q_nope.astype(jnp.float32),
+                           w_uk.astype(jnp.float32))
+        scores = jnp.einsum("bthr,bsr->bhts", q_lat,
+                            ckv_c.astype(jnp.float32))
+        scores += jnp.einsum("bthr,bsr->bhts", q_rope.astype(jnp.float32),
+                             kr_c.astype(jnp.float32))
+        scores *= 1.0 / float(qk_dim) ** 0.5
+        smax = ckv_c.shape[1]
+        mask = jnp.arange(smax) <= idx
+        scores = jnp.where(mask[None, None, None, :], scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1)
+        ctx_lat = jnp.einsum("bhts,bsr->bthr", w, ckv_c.astype(jnp.float32))
+        out = jnp.einsum("bthr,rhv->bthv", ctx_lat, w_uv.astype(jnp.float32))
+        out = out.astype(x.dtype).reshape(b, s, h * vdim)
+        new_cache = {"ckv": ckv_c, "krope": kr_c}
+    else:
+        # ---------------- train / prefill: expand and flash --------------
+        kv = (ckv @ p["wkv_b"].astype(x.dtype)).reshape(b, s, h, nope + vdim)
+        k_nope, v = kv[..., :nope], kv[..., nope:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, rope))],
+            axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk_dim - vdim)))
+        out = ops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v_pad.transpose(0, 2, 1, 3), causal=True, window=spec.window,
+            backend=backend)
+        out = out[..., :vdim].transpose(0, 2, 1, 3).reshape(b, s, h * vdim)
+        if cache is not None:
+            smax = cache["ckv"].shape[1]
+            new_cache = {
+                "ckv": jnp.pad(ckv, ((0, 0), (0, smax - s), (0, 0))).astype(cache["ckv"].dtype),
+                "krope": jnp.pad(k_rope, ((0, 0), (0, smax - s), (0, 0))).astype(cache["krope"].dtype),
+            }
+        else:
+            new_cache = None
+
+    return out @ p["wo"].astype(x.dtype), new_cache

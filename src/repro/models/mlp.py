@@ -1,0 +1,28 @@
+"""Dense gated MLP (SwiGLU / GeGLU)."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import KeyGen, act_fn, dense_init
+
+__all__ = ["init_mlp", "mlp_forward"]
+
+Params = dict[str, Any]
+
+
+def init_mlp(kg: KeyGen, d_in: int, d_ff: int) -> Params:
+    return {
+        "gate": dense_init(kg(), (d_in, d_ff)),
+        "up": dense_init(kg(), (d_in, d_ff)),
+        "down": dense_init(kg(), (d_ff, d_in)),
+    }
+
+
+def mlp_forward(p: Params, x: jax.Array, act: str = "silu") -> jax.Array:
+    g = act_fn(act)(x @ p["gate"].astype(x.dtype))
+    u = x @ p["up"].astype(x.dtype)
+    return (g * u) @ p["down"].astype(x.dtype)

@@ -1,0 +1,44 @@
+"""Modality-frontend STUBS (the one permitted carve-out, DESIGN.md §6).
+
+`chameleon` (early-fusion VLM): the VQ image tokenizer maps image patches to
+ids inside the unified 65536-token vocabulary; the stub emits mixed
+text+image token ids directly — the backbone is a plain LM over them
+(that is Chameleon's whole point).
+
+`musicgen` (audio): the EnCodec codec and T5 text conditioner are stubbed;
+we emit the (B, S, n_codebooks) token grid (delay-pattern already applied)
+and (B, cond_len, d_model) conditioning embeddings the decoder consumes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+__all__ = ["vq_tokens_stub", "codec_tokens_stub", "conditioning_stub"]
+
+
+def vq_tokens_stub(key: jax.Array, batch: int, seq: int, cfg: ModelConfig,
+                   image_frac: float = 0.25) -> jax.Array:
+    """Mixed text+image token ids. The first `image_frac` of the sequence is
+    'image' tokens (ids in the top half of the vocab, where Chameleon's VQ
+    codes live); the rest are text ids."""
+    k1, k2 = jax.random.split(key)
+    n_img = int(seq * image_frac)
+    img = jax.random.randint(k1, (batch, n_img), cfg.vocab_size // 2, cfg.vocab_size)
+    txt = jax.random.randint(k2, (batch, seq - n_img), 0, cfg.vocab_size // 2)
+    return jnp.concatenate([img, txt], axis=1).astype(jnp.int32)
+
+
+def codec_tokens_stub(key: jax.Array, batch: int, seq: int, cfg: ModelConfig) -> jax.Array:
+    """(B, S, n_codebooks) EnCodec-style token grid (delay pattern applied
+    upstream by the stubbed codec)."""
+    return jax.random.randint(key, (batch, seq, cfg.n_codebooks), 0,
+                              cfg.vocab_size).astype(jnp.int32)
+
+
+def conditioning_stub(key: jax.Array, batch: int, cfg: ModelConfig) -> jax.Array:
+    """(B, cond_len, d_model) text-conditioning embeddings (stub T5)."""
+    return (jax.random.normal(key, (batch, cfg.cond_len, cfg.d_model)) * 0.02
+            ).astype(jnp.dtype(cfg.dtype))

@@ -1,0 +1,90 @@
+"""ResNet-18 (He et al., CVPR 2016) — the paper's experimental model.
+
+CIFAR variant (3x3 stem, no maxpool) in pure functional JAX. Normalization
+is batch-stat BatchNorm (statistics computed per forward pass, no running
+state) — equivalent at train time, and the setting in which the paper's
+gradient-inversion experiments operate (the attacker observes gradients of
+a training step). Conv kernels are (kh, kw, cin, cout); the compressor
+matricizes them to (kh*kw*cin, cout), matching PowerSGD's treatment.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import KeyGen
+
+__all__ = ["init_resnet18", "resnet18_forward", "resnet18_param_count"]
+
+Params = dict[str, Any]
+
+_STAGES = ((64, 2, 1), (128, 2, 2), (256, 2, 2), (512, 2, 2))
+
+
+def _conv_init(kg: KeyGen, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    return jax.random.normal(kg(), (kh, kw, cin, cout)) * jnp.sqrt(2.0 / fan_in)
+
+
+def _bn_init(c):
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+
+
+def init_resnet18(key: jax.Array, n_classes: int = 10, in_ch: int = 3) -> Params:
+    kg = KeyGen(key)
+    p: Params = {"stem": {"conv": _conv_init(kg, 3, 3, in_ch, 64), "bn": _bn_init(64)}}
+    cin = 64
+    for si, (cout, blocks, stride) in enumerate(_STAGES):
+        stage = []
+        for bi in range(blocks):
+            s = stride if bi == 0 else 1
+            blk = {
+                "conv1": _conv_init(kg, 3, 3, cin, cout), "bn1": _bn_init(cout),
+                "conv2": _conv_init(kg, 3, 3, cout, cout), "bn2": _bn_init(cout),
+            }
+            if s != 1 or cin != cout:
+                blk["proj"] = _conv_init(kg, 1, 1, cin, cout)
+                blk["bn_proj"] = _bn_init(cout)
+            stage.append(blk)
+            cin = cout
+        p[f"stage{si}"] = stage
+    p["fc"] = {"w": jax.random.normal(kg(), (512, n_classes)) / jnp.sqrt(512.0),
+               "b": jnp.zeros((n_classes,))}
+    return p
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _bn(x, p, eps=1e-5):
+    mean = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    return y * p["scale"] + p["bias"]
+
+
+def _block(x, blk, stride):
+    h = jax.nn.relu(_bn(_conv(x, blk["conv1"], stride), blk["bn1"]))
+    h = _bn(_conv(h, blk["conv2"]), blk["bn2"])
+    if "proj" in blk:
+        x = _bn(_conv(x, blk["proj"], stride), blk["bn_proj"])
+    return jax.nn.relu(x + h)
+
+
+def resnet18_forward(p: Params, x: jax.Array) -> jax.Array:
+    """x (B, H, W, C) -> logits (B, n_classes)."""
+    h = jax.nn.relu(_bn(_conv(x, p["stem"]["conv"]), p["stem"]["bn"]))
+    for si, (_, blocks, stride) in enumerate(_STAGES):
+        for bi in range(blocks):
+            h = _block(h, p[f"stage{si}"][bi], stride if bi == 0 else 1)
+    h = jnp.mean(h, axis=(1, 2))
+    return h @ p["fc"]["w"] + p["fc"]["b"]
+
+
+def resnet18_param_count(p: Params) -> int:
+    return sum(int(l.size) for l in jax.tree.leaves(p))

@@ -1,0 +1,214 @@
+"""Roofline terms from the compiled dry-run artifact.
+
+    compute    = HLO_FLOPs_global / (chips * PEAK_FLOPS)
+    memory     = HLO_bytes_global / (chips * HBM_BW)
+    collective = per-device collective wire bytes / ICI_LINK_BW
+
+``cost_analysis`` FLOPs/bytes are for the *per-partition* SPMD module
+(empirically verified in tests against known matmul FLOPs), so the global
+terms divide out: compute = flops_per_device / PEAK. Collective bytes are
+NOT in cost_analysis — we parse the compiled HLO and sum payloads of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+with a ring-model wire convention per op (documented in `_wire_bytes`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.roofline import hw
+
+__all__ = ["CollectiveStats", "parse_collectives", "roofline_terms",
+           "model_flops", "RooflineReport"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<shape>\([^)]*\)|[a-z0-9\[\],{}\s]*?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_ARR_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+
+
+def _arr_bytes(text: str) -> int:
+    total = 0
+    for m in _ARR_RE.finditer(text):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict[str, int]
+    out_bytes: dict[str, int]      # sum of output-shape bytes per op kind
+    wire_bytes: int                # ring-model per-device payload
+
+    def total_out(self) -> int:
+        return sum(self.out_bytes.values())
+
+
+def _wire_bytes(op: str, nbytes: int) -> int:
+    """Per-device wire payload under a ring model.
+
+    all-reduce: 2x payload (reduce-scatter + all-gather phases);
+    all-gather: output bytes (each device forwards ~(N-1)/N of the output);
+    reduce-scatter: output is 1/N of the reduced tensor; wire ~= N*out ~ in;
+      we only see the output shape here, so we charge out*2 as a lower-ish
+      bound and document it;
+    all-to-all / collective-permute: payload once.
+    """
+    if op == "all-reduce":
+        return 2 * nbytes
+    if op == "all-gather":
+        return nbytes
+    if op == "reduce-scatter":
+        return 2 * nbytes
+    return nbytes
+
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$",
+                      re.M)
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"=\s*s32\[\]\s*constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> dict[str, str]:
+    """Map computation name -> its body text (brace-balanced blocks)."""
+    comps: dict[str, str] = {}
+    for m in _COMP_RE.finditer(hlo_text):
+        name = m.group(1)
+        start = m.end()
+        depth = 1
+        i = start
+        while i < len(hlo_text) and depth:
+            c = hlo_text[i]
+            if c == "{":
+                depth += 1
+            elif c == "}":
+                depth -= 1
+            i += 1
+        comps[name] = hlo_text[start:i]
+    return comps
+
+
+def _trip_counts(hlo_text: str, comps: dict[str, str]) -> dict[str, int]:
+    """body-computation name -> while trip count (largest s32 constant in
+    the condition computation; scan lowers to `counter < N`). Fallback 1."""
+    trips: dict[str, int] = {}
+    for cond, body in _WHILE_RE.findall(hlo_text):
+        consts = [int(x) for x in _CONST_RE.findall(comps.get(cond, ""))]
+        trips[body] = max(consts) if consts else 1
+    return trips
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum collective payloads, multiplying ops inside while (scan) bodies
+    by the loop trip count — XLA's text lists the body once, but a scanned
+    80-layer model runs its per-layer collectives 80 times per step.
+    Nested whiles multiply through."""
+    comps = _split_computations(hlo_text)
+    trips = _trip_counts(hlo_text, comps)
+
+    # multiplier per computation: product of trip counts down the call chain
+    # (computations called from a while body inherit its multiplier)
+    called_by: dict[str, list[str]] = {}
+    call_re = re.compile(r"(?:calls=|to_apply=|condition=|body=)%?([\w\.\-]+)")
+    for name, body in comps.items():
+        for callee in call_re.findall(body):
+            called_by.setdefault(callee, []).append(name)
+
+    mult_cache: dict[str, int] = {}
+
+    def mult(name: str, seen=()) -> int:
+        if name in mult_cache:
+            return mult_cache[name]
+        if name in seen:
+            return 1
+        m = trips.get(name, 1)
+        parents = called_by.get(name, [])
+        pm = max((mult(p, seen + (name,)) for p in parents), default=1)
+        mult_cache[name] = m * pm
+        return mult_cache[name]
+
+    counts: dict[str, int] = {}
+    out_bytes: dict[str, int] = {}
+    wire = 0
+    blocks = list(comps.items()) or [("entry", hlo_text)]
+    seen_spans = []
+    for name, body in blocks:
+        k = mult(name)
+        for m in _COLL_RE.finditer(body):
+            op = m.group("op")
+            if "-done(" in m.group(0):
+                continue  # async pair: count the -start only
+            nbytes = _arr_bytes(m.group("shape"))
+            if nbytes == 0:
+                continue
+            counts[op] = counts.get(op, 0) + k
+            out_bytes[op] = out_bytes.get(op, 0) + nbytes * k
+            wire += _wire_bytes(op, nbytes) * k
+    return CollectiveStats(counts, out_bytes, wire)
+
+
+def model_flops(n_params_active: int, tokens: int) -> float:
+    """6·N·D (dense) — pass active params for MoE."""
+    return 6.0 * n_params_active * tokens
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    flops_per_device: float
+    bytes_per_device: float
+    collectives: CollectiveStats
+    chips: int
+
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+
+    def __post_init__(self):
+        self.compute_s = self.flops_per_device / hw.PEAK_FLOPS_BF16
+        self.memory_s = self.bytes_per_device / hw.HBM_BW
+        self.collective_s = self.collectives.wire_bytes / hw.ICI_LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_wire_bytes": self.collectives.wire_bytes,
+            "collective_counts": self.collectives.counts,
+            "collective_out_bytes": self.collectives.out_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "chips": self.chips,
+        }
+
+
+def roofline_terms(cost: dict, hlo_text: str, chips: int) -> RooflineReport:
+    return RooflineReport(
+        flops_per_device=float(cost.get("flops", 0.0)),
+        bytes_per_device=float(cost.get("bytes accessed", 0.0)),
+        collectives=parse_collectives(hlo_text),
+        chips=chips,
+    )

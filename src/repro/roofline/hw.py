@@ -1,0 +1,8 @@
+"""TPU v5e hardware constants (the compile TARGET; container is CPU)."""
+
+PEAK_FLOPS_BF16 = 197e12        # per chip, bf16
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_LINK_BW = 50e9              # bytes/s per link (assignment constant)
+
+CHIPS_PER_POD = 256
+HBM_BYTES = 16 * 1024**3        # 16 GiB per v5e chip

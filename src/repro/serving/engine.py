@@ -1,0 +1,131 @@
+"""Serving engine: prefill + decode steps with sharded caches.
+
+Inference has no gradient sync, so serve steps run under plain ``jax.jit``
+with auto sharding (the paper's technique is training-side; serving shapes
+exist to prove the whole system lowers on the production mesh).
+
+Cache sharding policy:
+  * attention KV (B, Hkv, S, hd): batch over DP axes when divisible;
+    kv-heads over `model` when divisible, else the *sequence* dim over
+    `model` — XLA then partitions decode attention flash-decoding style
+    (partial softmax stats + all-reduce), which is also the path batch=1
+    long-context decode takes (seq over data+model).
+  * MLA latent cache (B, S, r_kv): seq over `model` (single logical head).
+  * SSM state (B, H, P, N) / conv window: batch over DP, heads over `model`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.sharding import param_specs
+from repro.models.model import forward, init_caches, init_params, stacked_flags
+
+__all__ = ["cache_specs", "build_prefill_step", "build_decode_step",
+           "serve_shardings", "greedy_sample"]
+
+
+def _dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int) -> Any:
+    """PartitionSpec pytree matching init_caches output."""
+    dp = _dp_axes(mesh)
+    msize = mesh.shape["model"]
+    ndp = 1
+    for a in dp:
+        ndp *= mesh.shape[a]
+    batch_ax = dp if batch % max(ndp, 1) == 0 and batch >= ndp else None
+    seq_axes = ("model",) if batch_ax is not None else dp + ("model",)
+
+    def leaf_spec(path: str, x) -> P:
+        # caches under ['scan'] carry a leading stacked-layer dim (repeats)
+        stacked = "'scan'" in path
+        shape = x.shape[1:] if stacked else x.shape
+        nd = len(shape)
+        if "'ckv'" in path or "'krope'" in path:    # (B, S, r)
+            spec = P(batch_ax, seq_axes, None)
+        elif "'k'" in path or "'v'" in path:        # (B, Hkv, S, hd)
+            if shape[1] % msize == 0:
+                spec = P(batch_ax, "model", None, None)
+            else:
+                spec = P(batch_ax, None, seq_axes, None)
+        elif "'conv'" in path:                      # (B, K, C)
+            spec = P(batch_ax, None,
+                     "model" if shape[2] % msize == 0 else None)
+        elif "'ssm'" in path:                       # (B, H, P, N)
+            spec = P(batch_ax, "model" if shape[1] % msize == 0 else None,
+                     None, None)
+        else:
+            spec = P(*([None] * nd))
+        return P(None, *spec) if stacked else spec
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        jax.eval_shape(lambda: init_caches(cfg, batch, 8, jnp.bfloat16)))
+    specs = [leaf_spec(jax.tree_util.keystr(kp), x) for kp, x in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def serve_shardings(cfg: ModelConfig, mesh: Mesh, batch: int):
+    """(param_shardings, cache_shardings, token_sharding)."""
+    dp = _dp_axes(mesh)
+    ndp = 1
+    for a in dp:
+        ndp *= mesh.shape[a]
+    abstract = jax.eval_shape(lambda k: init_params(cfg, k),
+                              jax.random.PRNGKey(0))
+    pspecs = param_specs(abstract, stacked_flags(abstract),
+                         axis_size=mesh.shape["model"], cfg=cfg)
+    ns = lambda s: NamedSharding(mesh, s)
+    p_sh = jax.tree.map(ns, pspecs)
+    c_sh = jax.tree.map(ns, cache_specs(cfg, mesh, batch))
+    batch_ax = dp if batch % max(ndp, 1) == 0 and batch >= ndp else None
+    extra = 2 if cfg.n_codebooks else 1
+    t_sh = ns(P(batch_ax, *([None] * extra)))
+    return p_sh, c_sh, t_sh
+
+
+def build_prefill_step(cfg: ModelConfig, max_seq: int, *, backend: str = "xla",
+                       cache_dtype=jnp.bfloat16, unroll_scan: bool = False):
+    """prefill(params, tokens[, cond]) -> (last-position logits, caches)."""
+
+    def prefill(params, tokens, cond=None):
+        b = tokens.shape[0]
+        caches = init_caches(cfg, b, max_seq, cache_dtype)
+        logits, caches, _ = forward(params, tokens, cfg, caches=caches,
+                                    cond=cond, backend=backend,
+                                    unroll_scan=unroll_scan)
+        return logits[:, -1:], caches
+
+    return prefill
+
+
+def build_decode_step(cfg: ModelConfig, *, backend: str = "xla",
+                      unroll_scan: bool = False):
+    """decode(params, caches, tokens (B,1[,cb]), index) -> (logits, caches)."""
+
+    def decode(params, caches, tokens, index):
+        logits, caches, _ = forward(params, tokens, cfg, caches=caches,
+                                    cache_index=index, backend=backend,
+                                    unroll_scan=unroll_scan)
+        return logits, caches
+
+    return decode
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature_sample(key: jax.Array, logits: jax.Array,
+                       temperature: float = 1.0) -> jax.Array:
+    if temperature <= 0:
+        return greedy_sample(logits)
+    return jax.random.categorical(key, logits.astype(jnp.float32) / temperature,
+                                  axis=-1).astype(jnp.int32)

@@ -1,0 +1,83 @@
+"""Optimizers (pytree-functional, no external deps).
+
+The paper's Algorithm 1 updates with plain SGD on the reconstructed
+gradient; SGD+momentum and Adam are provided for the LM examples. The
+compressor always runs BEFORE the optimizer (it replaces the all-reduce).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "sgd", "adam", "make_optimizer"]
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+    # update(grads, opt_state, params) -> (new_params, new_opt_state)
+
+
+def sgd(lr: float, momentum: float = 0.0, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"mu": jax.tree.map(lambda w: jnp.zeros_like(w, jnp.float32), params)}
+
+    def update(grads, state, params):
+        if weight_decay:
+            grads = jax.tree.map(
+                lambda g, w: g.astype(jnp.float32) + weight_decay * w.astype(jnp.float32),
+                grads, params)
+        if momentum == 0.0:
+            new_params = jax.tree.map(
+                lambda w, g: (w.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(w.dtype),
+                params, grads)
+            return new_params, state
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                          state["mu"], grads)
+        new_params = jax.tree.map(
+            lambda w, m: (w.astype(jnp.float32) - lr * m).astype(w.dtype), params, mu)
+        return new_params, {"mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda w: jnp.zeros_like(w, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], g32)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], g32)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def step(w, m_, v_):
+            upd = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * w.astype(jnp.float32)
+            return (w.astype(jnp.float32) - lr * upd).astype(w.dtype)
+
+        return jax.tree.map(step, params, m, v), {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, lr: float, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr, **kw)
+    if name == "adam":
+        return adam(lr, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,50 @@
+"""Training loop: metrics, checkpointing, deterministic data order."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+
+from repro.checkpoint.io import save as ckpt_save
+
+__all__ = ["TrainerConfig", "Trainer"]
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 0          # 0 = disabled
+    ckpt_path: str = "checkpoints/state.ckpt"
+
+
+class Trainer:
+    """Drives a jitted step over a deterministic per-step data function."""
+
+    def __init__(self, step_fn: Callable, batch_fn: Callable[[int], Any],
+                 cfg: TrainerConfig):
+        self.step_fn = step_fn
+        self.batch_fn = batch_fn
+        self.cfg = cfg
+        self.history: list[dict[str, float]] = []
+
+    def run(self, state: Any, start_step: int = 0) -> Any:
+        t0 = time.time()
+        for step in range(start_step, self.cfg.steps):
+            batch = self.batch_fn(step)
+            state, metrics = self.step_fn(state, batch)
+            if (step % self.cfg.log_every == 0
+                    or step == self.cfg.steps - 1):
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = step
+                m["wall_s"] = round(time.time() - t0, 2)
+                self.history.append(m)
+                msg = " ".join(f"{k}={v:.4f}" for k, v in m.items()
+                               if k not in ("step", "wall_s"))
+                print(f"step {step:5d} | {msg} | t={m['wall_s']}s")
+            if self.cfg.ckpt_every and step and step % self.cfg.ckpt_every == 0:
+                host_state = jax.tree.map(lambda x: jax.device_get(x), state)
+                ckpt_save(self.cfg.ckpt_path, host_state)
+        return state

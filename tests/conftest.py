@@ -1,0 +1,27 @@
+"""Shared test utilities.
+
+NOTE: we intentionally do NOT set --xla_force_host_platform_device_count
+here — smoke tests and benches must see the 1 real CPU device. Tests that
+need true multi-device shard_map semantics either use
+``jax.vmap(axis_name=...)`` (exact named-axis collective semantics on one
+device) or spawn a subprocess with XLA_FLAGS set (see test_distributed.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def simulate_workers(fn, n_workers, *per_worker_args, axis_name="data"):
+    """Run ``fn(worker_args...)`` for N workers with real collective semantics
+    via vmap's named axis. Each arg has leading dim n_workers."""
+    return jax.vmap(fn, axis_name=axis_name)(*per_worker_args)
+
+
+def broadcast_state(state, n):
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), state)

@@ -1,0 +1,128 @@
+"""Per-architecture smoke tests (assignment requirement).
+
+Each of the 10 assigned archs instantiates a REDUCED variant of the same
+family (<=2-ish layers, d_model<=256, <=4 experts) and runs one forward and
+one SGD train step on CPU, asserting output shapes and no NaNs. Decode-step
+smoke for every arch too (all are decoder-only). FULL configs are exercised
+only via the dry-run (eval_shape / ShapeDtypeStruct — no allocation), with a
+param-count audit here.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config, list_archs, shape_supported
+from repro.models.model import forward, init_caches, init_params
+from repro.models.multimodal import codec_tokens_stub, conditioning_stub, vq_tokens_stub
+
+ARCHS = list_archs()
+B, S = 2, 32
+
+
+def _tokens(cfg, key, batch=B, seq=S):
+    if cfg.n_codebooks:
+        return codec_tokens_stub(key, batch, seq, cfg)
+    if cfg.arch_type == "vlm":
+        return vq_tokens_stub(key, batch, seq, cfg)
+    return jax.random.randint(key, (batch, seq), 0, cfg.vocab_size)
+
+
+def _cond(cfg, key, batch=B):
+    return conditioning_stub(key, batch, cfg) if cfg.cond_len else None
+
+
+def _ce_loss(params, tokens, cfg, cond=None):
+    logits, _, aux = forward(params, tokens, cfg, cond=cond)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    tgt = jnp.roll(tokens, -1, axis=1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)
+    return jnp.mean(nll) + 0.01 * aux["moe_aux"]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward(arch):
+    cfg = get_config(arch, smoke=True)
+    assert cfg.d_model <= 512 and cfg.repeats <= 2
+    assert cfg.n_experts <= 4
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tok = _tokens(cfg, jax.random.PRNGKey(1))
+    logits, _, aux = forward(params, tok, cfg, cond=_cond(cfg, jax.random.PRNGKey(2)))
+    if cfg.n_codebooks:
+        assert logits.shape == (B, S, cfg.n_codebooks, cfg.vocab_size)
+    else:
+        assert logits.shape == (B, S, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tok = _tokens(cfg, jax.random.PRNGKey(1))
+    cond = _cond(cfg, jax.random.PRNGKey(2))
+
+    loss, grads = jax.value_and_grad(_ce_loss)(params, tok, cfg, cond)
+    assert np.isfinite(float(loss))
+    gnorms = [float(jnp.linalg.norm(l.astype(jnp.float32)))
+              for l in jax.tree.leaves(grads)]
+    assert all(np.isfinite(g) for g in gnorms)
+    assert max(gnorms) > 0
+    # one SGD step moves the loss
+    new_params = jax.tree.map(lambda w, g: w - 0.1 * g.astype(w.dtype), params, grads)
+    loss2 = _ce_loss(new_params, tok, cfg, cond)
+    assert np.isfinite(float(loss2))
+    assert float(loss2) < float(loss)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = get_config(arch, smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tok = _tokens(cfg, jax.random.PRNGKey(1), seq=8)
+    caches = init_caches(cfg, B, 16, jnp.float32)
+    logits_p, caches, _ = forward(params, tok, cfg, caches=caches)
+    nxt = jnp.argmax(logits_p[:, -1:], -1).astype(jnp.int32)
+    logits_d, caches, _ = forward(params, nxt, cfg, caches=caches,
+                                  cache_index=jnp.int32(8))
+    assert logits_d.shape[1] == 1
+    assert not bool(jnp.any(jnp.isnan(logits_d.astype(jnp.float32))))
+
+
+def test_all_archs_registered_and_valid():
+    assert len(ARCHS) == 10
+    types = {get_config(a).arch_type for a in ARCHS}
+    assert types == {"dense", "moe", "ssm", "hybrid", "vlm", "audio"}
+
+
+@pytest.mark.parametrize("arch,nominal_b", [
+    ("mamba2-370m", 0.37), ("deepseek-v3-671b", 671.0), ("jamba-v0.1-52b", 52.0),
+    ("qwen2-72b", 72.0), ("gemma3-1b", 1.0), ("mixtral-8x7b", 46.7),
+    ("mistral-nemo-12b", 12.0), ("chameleon-34b", 34.0),
+    ("musicgen-medium", 1.5), ("granite-20b", 20.0),
+])
+def test_full_config_param_counts(arch, nominal_b):
+    """Full configs audited via eval_shape (no allocation). Granite/MusicGen
+    inflate vs nominal because our decoder uses gated MLPs (DESIGN.md)."""
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    n = sum(int(l.size) for l in jax.tree.leaves(shapes)) / 1e9
+    tol = 1.45 if arch in ("granite-20b", "musicgen-medium") else 1.12
+    assert nominal_b / tol < n < nominal_b * tol, (arch, n)
+
+
+def test_long_context_eligibility():
+    assert shape_supported("mamba2-370m", "long_500k")
+    assert shape_supported("gemma3-1b", "long_500k")
+    assert not shape_supported("qwen2-72b", "long_500k")
+    assert not shape_supported("deepseek-v3-671b", "long_500k")
+    for a in ARCHS:
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert shape_supported(a, s)
+
+
+def test_input_shapes_table():
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["prefill_32k"].seq_len == 32768
+    assert INPUT_SHAPES["decode_32k"].mode == "decode"
+    assert INPUT_SHAPES["long_500k"].seq_len == 524288

@@ -1,0 +1,79 @@
+"""Unit tests for dry-run inputs and report generation (no 256-chip compile
+here — the real sweep artifacts live in experiments/dryrun/)."""
+import json
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config, list_archs, shape_supported
+from repro.launch.inputs import input_specs, make_concrete_batch
+from repro.roofline.report import dedupe, dryrun_table, load, roofline_table
+
+
+@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("shape", sorted(INPUT_SHAPES))
+def test_input_specs_all_combos(arch, shape):
+    cfg = get_config(arch)
+    sh = INPUT_SHAPES[shape]
+    specs = input_specs(cfg, sh)
+    tok = specs["tokens"]
+    assert tok.dtype == jnp.int32
+    assert tok.shape[0] == sh.global_batch
+    if sh.mode == "decode":
+        assert tok.shape[1] == 1
+        assert "index" in specs
+    else:
+        assert tok.shape[1] == sh.seq_len
+    if cfg.n_codebooks:
+        assert tok.shape[-1] == cfg.n_codebooks
+    if cfg.cond_len and sh.mode != "decode":
+        assert specs["cond"].shape == (sh.global_batch, cfg.cond_len, cfg.d_model)
+
+
+def test_concrete_batch_matches_specs():
+    cfg = get_config("musicgen-medium", smoke=True)
+    sh = INPUT_SHAPES["train_4k"]
+    import dataclasses
+    small = dataclasses.replace(sh, global_batch=2, seq_len=8)
+    b = make_concrete_batch(cfg, small)
+    assert b["tokens"].shape == (2, 8, cfg.n_codebooks)
+    assert int(b["tokens"].max()) < cfg.vocab_size
+
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+@pytest.mark.skipif(not os.path.isdir(ART_DIR), reason="no sweep artifacts")
+def test_sweep_artifacts_complete():
+    """The committed dry-run sweep must cover every (arch x shape x mesh)."""
+    recs = dedupe(load(ART_DIR))
+    missing, bad = [], []
+    for a in list_archs():
+        for s in sorted(INPUT_SHAPES):
+            for mp in (False, True):
+                r = recs.get((a, s, mp))
+                if r is None:
+                    missing.append((a, s, mp))
+                elif r["status"] == "error":
+                    bad.append((a, s, mp))
+                elif r["status"] == "skipped":
+                    assert not shape_supported(a, s)
+                else:
+                    assert r["status"] == "ok"
+                    assert r["compile_s"] > 0
+                    assert r["analytic_flops_per_device"] > 0
+    assert not missing, missing
+    assert not bad, bad
+
+
+@pytest.mark.skipif(not os.path.isdir(ART_DIR), reason="no sweep artifacts")
+def test_report_tables_render():
+    recs = dedupe(load(ART_DIR))
+    t1 = dryrun_table(recs, False)
+    t2 = dryrun_table(recs, True)
+    t3 = roofline_table(recs)
+    assert "MISSING" not in t1 and "MISSING" not in t2
+    assert t3.count("|") > 100
+    for a in list_archs():
+        assert a in t1 and a in t3

@@ -1,0 +1,125 @@
+"""Unit + property tests for the paper's log-quantizer (Eq. 5/6)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantization import (
+    LogQuantConfig,
+    dequantize,
+    dequantize_with_scale,
+    log_compress,
+    log_expand,
+    quantize,
+    quantize_with_scale,
+    roundtrip,
+    code_dtype,
+    wire_bits,
+)
+
+
+class TestLogMap:
+    def test_inverse_identity(self):
+        x = jnp.linspace(-1, 1, 101)
+        for alpha in (0.5, 1.0, 10.0, 100.0):
+            y = log_expand(log_compress(x, alpha), alpha)
+            np.testing.assert_allclose(y, x, atol=1e-6)
+
+    def test_range(self):
+        x = jnp.linspace(-1, 1, 101)
+        q = log_compress(x, 10.0)
+        assert float(jnp.max(jnp.abs(q))) <= 1.0 + 1e-6
+
+    def test_sign_preserved(self):
+        x = jnp.array([-0.5, -1e-4, 0.0, 1e-4, 0.9])
+        q = log_compress(x, 10.0)
+        np.testing.assert_array_equal(jnp.sign(q), jnp.sign(x))
+
+    def test_more_precision_near_zero(self):
+        """The log map's derivative is larger near 0 -> finer effective bins."""
+        alpha = 10.0
+        d_small = log_compress(jnp.float32(0.01), alpha) - log_compress(jnp.float32(0.0), alpha)
+        d_large = log_compress(jnp.float32(0.99), alpha) - log_compress(jnp.float32(0.98), alpha)
+        assert float(d_small) > float(d_large)
+
+
+class TestQuantize:
+    @pytest.mark.parametrize("bits", [4, 6, 8, 12])
+    @pytest.mark.parametrize("alpha", [1.0, 10.0])
+    def test_roundtrip_error_bound(self, bits, alpha):
+        cfg = LogQuantConfig(bits=bits, alpha=alpha)
+        x = jax.random.normal(jax.random.PRNGKey(0), (4096,))
+        y = roundtrip(x, cfg)
+        # One uniform bin in log space maps to bounded relative error; the
+        # max abs error after scaling is <= scale * bin_width * d/dq expand.
+        scale = float(jnp.max(jnp.abs(x)))
+        max_err = float(jnp.max(jnp.abs(y - x)))
+        bin_w = 1.0 / cfg.levels
+        worst = scale * (np.expm1(np.log1p(alpha)) / alpha) * np.log1p(alpha) * bin_w
+        assert max_err <= worst + 1e-6
+
+    def test_codes_dtype_and_range(self):
+        cfg = LogQuantConfig(bits=8)
+        x = jax.random.normal(jax.random.PRNGKey(1), (257,))
+        codes, scale = quantize_with_scale(x, cfg)
+        assert codes.dtype == code_dtype(8)
+        assert int(jnp.max(jnp.abs(codes.astype(jnp.int32)))) <= cfg.levels
+
+    def test_zero_tensor(self):
+        cfg = LogQuantConfig(bits=8)
+        x = jnp.zeros((64,))
+        codes, scale = quantize_with_scale(x, cfg)
+        y = dequantize_with_scale(codes, scale, cfg)
+        np.testing.assert_array_equal(y, x)
+
+    def test_wire_bits(self):
+        assert wire_bits(1000, 8) == 8032
+        assert wire_bits(1, 4) == 36
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+    def test_dtypes(self, dtype):
+        cfg = LogQuantConfig(bits=8)
+        x = jax.random.normal(jax.random.PRNGKey(2), (128, 8)).astype(dtype)
+        codes, scale = quantize_with_scale(x, cfg)
+        y = dequantize_with_scale(codes, scale, cfg)
+        assert float(jnp.max(jnp.abs(y - x.astype(jnp.float32)))) < 0.1
+
+    def test_invalid_cfg(self):
+        with pytest.raises(ValueError):
+            LogQuantConfig(bits=1)
+        with pytest.raises(ValueError):
+            LogQuantConfig(alpha=-1.0)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    bits=st.integers(3, 12),
+    alpha=st.floats(0.1, 200.0),
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(1, 300),
+)
+def test_property_roundtrip(bits, alpha, seed, n):
+    """|roundtrip(x) - x| <= scale * lipschitz * bin width, and sign kept."""
+    cfg = LogQuantConfig(bits=bits, alpha=alpha)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,)) * 3.0
+    codes, scale = quantize_with_scale(x, cfg)
+    y = dequantize_with_scale(codes, scale, cfg)
+    # dequantized sign never flips (zero allowed)
+    sx, sy = np.sign(np.asarray(x)), np.sign(np.asarray(y))
+    assert np.all((sy == sx) | (sy == 0))
+    # bounded error: one bin in q-space, expanded by the max slope of Eq. 6
+    lip = np.log1p(alpha) * (1 + alpha) / alpha  # max d/dq of expand on [0,1]
+    bound = float(scale) * lip / cfg.levels
+    assert float(jnp.max(jnp.abs(y - x))) <= bound * 1.01 + 1e-7
+
+
+@settings(max_examples=30, deadline=None)
+@given(bits=st.integers(3, 10), seed=st.integers(0, 1000))
+def test_property_monotone(bits, seed):
+    """Quantization is monotone: x1 <= x2 -> code(x1) <= code(x2)."""
+    cfg = LogQuantConfig(bits=bits, alpha=10.0)
+    x = jnp.sort(jax.random.normal(jax.random.PRNGKey(seed), (64,)))
+    codes = quantize(x / jnp.maximum(jnp.max(jnp.abs(x)), 1e-9), cfg)
+    c = np.asarray(codes, dtype=np.int32)
+    assert np.all(np.diff(c) >= 0)

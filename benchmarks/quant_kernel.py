@@ -13,8 +13,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.codec import LogQuantCodec, pack_nibbles
 from repro.kernels import ops, ref
-from repro.kernels.log_quant import log_quantize_pallas
+from repro.kernels.log_quant import log_quantize_pallas, pack_nibbles_pallas
 
 
 def _time(fn, *args, iters=20):
@@ -49,10 +50,29 @@ def run() -> list[tuple[str, float, str]]:
                 "interpret-mode (CPU); TPU is the target"))
     out.append(("quant_kernel/powersgd_matmuls", us_matmul,
                 f"flops_ratio_quant_to_matmul={quant_flops/matmul_flops:.5f}"))
-    # parity check
+    # ---- b=4 nibble pack: the codec layer's sub-byte wire ----
+    codes4 = ref.log_quantize_ref(p, scale, 4, 10.0)
+    us_pack_jnp = _time(jax.jit(pack_nibbles), codes4)
+    us_pack_pl = _time(lambda c: pack_nibbles_pallas(c, interpret=True), codes4)
+    out.append(("quant_kernel/jnp_pack_nibbles", us_pack_jnp,
+                f"{codes4.size} codes -> {(codes4.size + 1) // 2} bytes"))
+    out.append(("quant_kernel/pallas_pack_nibbles", us_pack_pl,
+                "interpret-mode (CPU); TPU is the target"))
+
+    # ---- end-to-end codec encode (quantize + pack), both backends ----
+    xn = p / jnp.maximum(scale, 1e-9)
+    for backend in ("jnp_ref", "pallas"):
+        codec = LogQuantCodec(bits=4, backend=backend)
+        us = _time(jax.jit(lambda v, c=codec: c.encode(v)), xn)
+        out.append((f"quant_kernel/codec_encode_b4_{backend}", us,
+                    f"wire={codec.wire_bits(xn.size) // 8}B for {xn.size} elems"))
+
+    # parity checks
     got = log_quantize_pallas(p, scale, bits=8, alpha=10.0, interpret=True)
     want = ref.log_quantize_ref(p, scale, 8, 10.0)
     assert np.array_equal(np.asarray(got), np.asarray(want))
+    assert np.array_equal(np.asarray(pack_nibbles_pallas(codes4, interpret=True)),
+                          np.asarray(pack_nibbles(codes4)))
     return out
 
 

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import make_mesh, use_mesh
 from repro.models.model import init_params
 from repro.serving.engine import (build_decode_step, build_prefill_step,
                                   greedy_sample, serve_shardings)
@@ -25,7 +25,7 @@ def main():
     batch, prompt_len, gen = 4, 32, 24
     max_seq = prompt_len + gen
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         params = init_params(cfg, jax.random.PRNGKey(0))
         tokens = jax.random.randint(jax.random.PRNGKey(1),
                                     (batch, prompt_len), 0, cfg.vocab_size)

@@ -14,9 +14,35 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:  # clean env: fall back to stdlib zlib (see _compress)
+    zstandard = None
+import zlib
 
 __all__ = ["save", "restore"]
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _compress(payload: bytes, level: int) -> bytes:
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=level).compress(payload)
+    return zlib.compress(payload, min(level, 9))
+
+
+def _decompress(blob: bytes) -> bytes:
+    """Sniff the container by magic: zstd frames start with 28 B5 2F FD,
+    zlib streams with 0x78 — so checkpoints stay readable either way
+    (a zstd file on a zlib-only env raises with a clear message)."""
+    if blob[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise RuntimeError(
+                "checkpoint is zstd-compressed but `zstandard` is not "
+                "installed (pip install -r requirements-dev.txt)")
+        return zstandard.ZstdDecompressor().decompress(blob)
+    return zlib.decompress(blob)
 
 
 def _flatten(tree: Any) -> dict[str, np.ndarray]:
@@ -35,7 +61,7 @@ def save(path: str, tree: Any, *, level: int = 3) -> int:
                      ).tobytes(),
         }
     payload = msgpack.packb({"version": 1, "entries": entries})
-    comp = zstandard.ZstdCompressor(level=level).compress(payload)
+    comp = _compress(payload, level)
     tmp = path + ".tmp"
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     with open(tmp, "wb") as f:
@@ -48,7 +74,7 @@ def restore(path: str, like: Any, shardings: Any | None = None) -> Any:
     """``like``: pytree of arrays or ShapeDtypeStructs with the target
     structure. Raises on any mismatch (no silent partial restores)."""
     with open(path, "rb") as f:
-        payload = zstandard.ZstdDecompressor().decompress(f.read())
+        payload = _decompress(f.read())
     entries = msgpack.unpackb(payload)["entries"]
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(like)

@@ -1,4 +1,12 @@
 """LQ-SGD core: gradient compression for distributed training (the paper)."""
+from repro.core.codec import (
+    Float32Codec,
+    LogQuantCodec,
+    QSGDCodec,
+    WireCodec,
+    codec_phase,
+    make_wire_codec,
+)
 from repro.core.comm import AxisComm, CommRecord
 from repro.core.compressors import (
     CompressorConfig,
@@ -23,5 +31,11 @@ __all__ = [
     "LQSGDCompressor",
     "PowerSGDCompressor",
     "LogQuantConfig",
+    "WireCodec",
+    "Float32Codec",
+    "LogQuantCodec",
+    "QSGDCodec",
+    "codec_phase",
+    "make_wire_codec",
     "make_compressor",
 ]

@@ -1,0 +1,368 @@
+"""The wire-codec layer: every compressor's quantize -> pack -> collective
+-> dequantize pipeline lives here.
+
+A :class:`WireCodec` turns a normalized float tensor into the exact array
+that travels over the interconnect (``encode``), recovers code values from
+gathered wire bytes (``decode``), and maps averaged codes back to values
+(``expand``).  ``wire_bits`` reports the *actual* byte size of the encoded
+array — with b<=4 codes nibble-packed two-per-int8-lane, so wire accounting
+and array bytes agree (a b=4 tensor really travels at half the int8 bytes).
+
+Registered codecs:
+
+  * :class:`Float32Codec`  — identity fp32 wire (PowerSGD factors, TopK's
+    dense-simulated sparse payload);
+  * :class:`LogQuantCodec` — the paper's Eq. 5/6 log-quantizer, with two
+    backends: ``jnp_ref`` (pure jnp, default) and ``pallas`` (the fused TPU
+    kernels in ``repro.kernels.log_quant``, interpret-mode off-TPU),
+    validated bit-for-bit against each other;
+  * :class:`QSGDCodec`     — stochastic uniform quantization (Alistarh et
+    al. 2017), the canonical baseline the paper cites.
+
+:func:`codec_phase` is the one collective primitive all compressors share:
+it scales (fused pmax), encodes, ships (ONE fused flat all-gather when
+``fuse=True``, else per-tensor gathers), decodes and averages a *list* of
+tensors.  PowerSGD's P-phase and Q-phase, LQ-SGD's quantized factor wire,
+QSGD's payload and TopK's dense simulation are all single calls into it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.comm import AxisComm, CommRecord
+from repro.core.quantization import LogQuantConfig, log_expand, quantize
+
+__all__ = [
+    "WireCodec",
+    "Float32Codec",
+    "LogQuantCodec",
+    "QSGDCodec",
+    "make_wire_codec",
+    "codec_phase",
+    "pack_nibbles",
+    "unpack_nibbles",
+    "packed_wire_bits",
+    "CODEC_BACKENDS",
+]
+
+CODEC_BACKENDS = ("jnp_ref", "pallas")
+
+
+def _pallas_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# --------------------------------------------------------------------------
+# bit packing: two 4-bit two's-complement codes per int8 lane
+# --------------------------------------------------------------------------
+
+def pack_nibbles(codes: jax.Array) -> jax.Array:
+    """Signed codes in [-8, 7] (any shape) -> 1-D int8, byte i = c[2i] | c[2i+1]<<4."""
+    flat = codes.reshape(-1).astype(jnp.int32)
+    if flat.size % 2:
+        flat = jnp.pad(flat, (0, 1))
+    lo, hi = flat[0::2], flat[1::2]
+    return ((lo & 0xF) | ((hi & 0xF) << 4)).astype(jnp.int8)
+
+
+def unpack_nibbles(packed: jax.Array, numel: int) -> jax.Array:
+    """Packed int8 (..., nbytes) -> signed int32 codes (..., numel)."""
+    v = packed.astype(jnp.int32) & 0xFF
+    lo = v & 0xF
+    hi = (v >> 4) & 0xF
+    sext = lambda n: (n ^ 8) - 8  # sign-extend a 4-bit two's-complement nibble
+    codes = jnp.stack([sext(lo), sext(hi)], axis=-1)
+    return codes.reshape(packed.shape[:-1] + (-1,))[..., :numel]
+
+
+def packed_wire_bits(numel: int, bits: int) -> int:
+    """Exact bits of the encoded array: nibble-packed int8 for b<=4, int8
+    for b<=8, int16 above — matching the containers ``encode`` emits."""
+    if bits <= 4:
+        return ((numel + 1) // 2) * 8
+    if bits <= 8:
+        return numel * 8
+    return numel * 16
+
+
+# --------------------------------------------------------------------------
+# codecs
+# --------------------------------------------------------------------------
+
+class WireCodec:
+    """Protocol: what a compressor needs to put a tensor on the wire.
+
+    ``codes``   normalized values -> integer (or identity float) code array,
+                same shape as the input (pre-packing; ``psum_sim`` wire and
+                the averaging math use these);
+    ``encode``  normalized values -> the 1-D wire array (packed for b<=4);
+    ``decode``  gathered wire array (..., nbytes|numel) -> float code values
+                (..., numel);
+    ``expand``  (possibly averaged) float codes -> normalized values;
+    ``wire_bits``  exact bits of ``encode``'s output for ``numel`` elements;
+    ``scale_bits`` bits of scale sideband (0 when ``needs_scale`` is False).
+    """
+
+    bits: int = 32
+    needs_scale: bool = True
+
+    def codes(self, x: jax.Array, *, key: jax.Array | None = None) -> jax.Array:
+        raise NotImplementedError
+
+    def encode(self, x: jax.Array, *, key: jax.Array | None = None) -> jax.Array:
+        raise NotImplementedError
+
+    def decode(self, wire: jax.Array, numel: int) -> jax.Array:
+        raise NotImplementedError
+
+    def expand(self, codes: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def wire_bits(self, numel: int) -> int:
+        raise NotImplementedError
+
+    def scale_bits(self, n_scales: int) -> int:
+        return 32 * n_scales if self.needs_scale else 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Float32Codec(WireCodec):
+    """Identity fp32 wire: 'codes' are the values themselves."""
+
+    bits: int = 32
+    needs_scale: bool = False
+
+    def codes(self, x, *, key=None):
+        return x.astype(jnp.float32)
+
+    def encode(self, x, *, key=None):
+        return x.astype(jnp.float32).reshape(-1)
+
+    def decode(self, wire, numel):
+        return wire.astype(jnp.float32)
+
+    def expand(self, codes):
+        return codes
+
+    def wire_bits(self, numel):
+        return numel * 32
+
+
+@dataclasses.dataclass(frozen=True)
+class LogQuantCodec(WireCodec):
+    """Paper Eq. 5/6 log-quantizer. ``backend='pallas'`` routes the
+    quantize/dequantize math and the b<=4 nibble pack through the Pallas
+    kernels (interpret mode off-TPU); both backends emit identical bytes."""
+
+    bits: int = 8
+    alpha: float = 10.0
+    backend: str = "jnp_ref"
+    needs_scale: bool = True
+
+    def __post_init__(self):
+        if self.backend not in CODEC_BACKENDS:
+            raise ValueError(
+                f"unknown quant backend {self.backend!r}; options: {CODEC_BACKENDS}")
+
+    @property
+    def _cfg(self) -> LogQuantConfig:
+        return LogQuantConfig(bits=self.bits, alpha=self.alpha)
+
+    def codes(self, x, *, key=None):
+        if self.backend == "pallas":
+            from repro.kernels.log_quant import log_quantize_pallas
+            return log_quantize_pallas(x, jnp.float32(1.0), bits=self.bits,
+                                       alpha=self.alpha,
+                                       interpret=_pallas_interpret())
+        return quantize(x, self._cfg)
+
+    def encode(self, x, *, key=None):
+        c = self.codes(x)
+        if self.bits <= 4:
+            if self.backend == "pallas":
+                from repro.kernels.log_quant import pack_nibbles_pallas
+                return pack_nibbles_pallas(c, interpret=_pallas_interpret())
+            return pack_nibbles(c)
+        return c.reshape(-1)
+
+    def decode(self, wire, numel):
+        if self.bits <= 4:
+            return unpack_nibbles(wire, numel).astype(jnp.float32)
+        return wire.astype(jnp.float32)
+
+    def expand(self, codes):
+        if self.backend == "pallas":
+            from repro.kernels.log_quant import log_dequantize_pallas
+            return log_dequantize_pallas(codes, jnp.float32(1.0), bits=self.bits,
+                                         alpha=self.alpha,
+                                         interpret=_pallas_interpret())
+        return log_expand(codes.astype(jnp.float32) / self._cfg.levels, self.alpha)
+
+    def wire_bits(self, numel):
+        return packed_wire_bits(numel, self.bits)
+
+
+@dataclasses.dataclass(frozen=True)
+class QSGDCodec(WireCodec):
+    """QSGD stochastic uniform quantization: E[expand(codes(x))] = x.
+    Requires a per-call PRNG ``key`` (per-worker, per-tensor, per-step)."""
+
+    bits: int = 8
+    backend: str = "jnp_ref"
+    needs_scale: bool = True
+
+    def __post_init__(self):
+        if self.backend not in CODEC_BACKENDS:
+            raise ValueError(
+                f"unknown quant backend {self.backend!r}; options: {CODEC_BACKENDS}")
+
+    @property
+    def levels(self) -> int:
+        return (1 << (self.bits - 1)) - 1
+
+    def codes(self, x, *, key=None):
+        if key is None:
+            raise ValueError("QSGDCodec.codes requires a PRNG key")
+        x = x.astype(jnp.float32)
+        y = jnp.abs(x) * self.levels
+        lo = jnp.floor(y)
+        rnd = jax.random.uniform(key, x.shape)
+        q = (lo + (rnd < (y - lo))) * jnp.sign(x)
+        q = jnp.clip(q, -self.levels, self.levels)
+        return q.astype(jnp.int8 if self.bits <= 8 else jnp.int16)
+
+    def encode(self, x, *, key=None):
+        c = self.codes(x, key=key)
+        if self.bits <= 4:
+            if self.backend == "pallas":
+                from repro.kernels.log_quant import pack_nibbles_pallas
+                return pack_nibbles_pallas(c, interpret=_pallas_interpret())
+            return pack_nibbles(c)
+        return c.reshape(-1)
+
+    def decode(self, wire, numel):
+        if self.bits <= 4:
+            return unpack_nibbles(wire, numel).astype(jnp.float32)
+        return wire.astype(jnp.float32)
+
+    def expand(self, codes):
+        return codes.astype(jnp.float32) / self.levels
+
+    def wire_bits(self, numel):
+        return packed_wire_bits(numel, self.bits)
+
+
+def make_wire_codec(kind: str, *, bits: int = 8, alpha: float = 10.0,
+                    backend: str = "jnp_ref") -> WireCodec:
+    """Registry entry point: kind in {'float32', 'log', 'qsgd'}."""
+    if kind == "float32":
+        return Float32Codec()
+    if kind == "log":
+        return LogQuantCodec(bits=bits, alpha=alpha, backend=backend)
+    if kind == "qsgd":
+        return QSGDCodec(bits=bits, backend=backend)
+    raise ValueError(f"unknown codec kind {kind!r}")
+
+
+# --------------------------------------------------------------------------
+# the shared collective phase
+# --------------------------------------------------------------------------
+
+def _local_absmax(x: jax.Array, stacked: bool) -> jax.Array:
+    """Per-tensor max |x|; per-layer (leading dim) when stacked."""
+    if stacked:
+        return jnp.max(jnp.abs(x), axis=tuple(range(1, x.ndim)), keepdims=True)
+    return jnp.max(jnp.abs(x)).reshape(())
+
+
+def codec_phase(xs: Sequence[jax.Array], stacked_flags: Sequence[bool],
+                codec: WireCodec, comm: AxisComm, rec: CommRecord, *,
+                avg_mode: str = "paper", wire: str = "allgather_codes",
+                fuse: bool = False, keys: Sequence[jax.Array | None] | None = None,
+                account_bits: Sequence[int] | None = None) -> list[jax.Array]:
+    """Ship a list of tensors through one quantized collective phase.
+
+    Every tensor is scaled against a globally-pmax'd per-instance grid
+    (per-layer for stacked tensors), encoded by ``codec``, gathered —
+    as ONE fused flat collective when ``fuse=True``, else one collective
+    per tensor — then decoded and averaged:
+
+      avg_mode='paper'             expand(mean(codes))   [Alg. 1 literal]
+      avg_mode='dequant_then_mean' mean(expand(codes))
+
+    ``wire='psum_sim'`` simulates the ring all-reduce with a pmean over
+    (float) codes instead of gathering actual wire bytes.
+
+    ``rec`` is charged the *actual* bits of each encoded wire array (packed
+    b<=4 arrays are half their int8 size) plus 32 bits per scale, unless
+    ``account_bits`` overrides the payload (TopK's sparse accounting over a
+    dense simulation). Returns the synchronized (mean) tensors, one per
+    input, in input shapes.
+    """
+    n = len(xs)
+    if n == 0:
+        return []
+    keys = list(keys) if keys is not None else [None] * n
+    xs = [x.astype(jnp.float32) for x in xs]
+
+    # ---- shared quantization grid: per-instance global max ---------------
+    if codec.needs_scale:
+        local = [_local_absmax(x, st) for x, st in zip(xs, stacked_flags)]
+        if fuse:
+            gmax = comm.fused_pmax(local)
+        else:
+            gmax = [comm.pmax(l) for l in local]
+        safes = [jnp.where(s > 0, s, 1.0) for s in gmax]
+        xn = [x / s for x, s in zip(xs, safes)]
+        n_scales = [s.size for s in safes]
+    else:
+        safes = [None] * n
+        xn = xs
+        n_scales = [0] * n
+
+    def _rescale(val, safe):
+        return val if safe is None else val * safe
+
+    # ---- simulated ring all-reduce over codes ----------------------------
+    if wire == "psum_sim":
+        outs = []
+        for i, (x, safe, key, ns) in enumerate(zip(xn, safes, keys, n_scales)):
+            c = codec.codes(x, key=key)
+            payload = (account_bits[i] if account_bits is not None
+                       else x.size * codec.bits)
+            rec.add(payload + codec.scale_bits(ns), 1)
+            if avg_mode == "paper":
+                val = codec.expand(comm.pmean(c.astype(jnp.float32)))
+            else:
+                val = comm.pmean(codec.expand(c.astype(jnp.float32)))
+            outs.append(_rescale(val, safe))
+        return outs
+    if wire != "allgather_codes":
+        raise ValueError(f"unknown wire mode {wire!r}")
+
+    # ---- exact wire: encode -> (fused) all-gather -> decode --------------
+    wires = [codec.encode(x, key=key) for x, key in zip(xn, keys)]
+    for i, (w, ns) in enumerate(zip(wires, n_scales)):
+        payload = (account_bits[i] if account_bits is not None
+                   else w.size * w.dtype.itemsize * 8)
+        rec.add(payload + codec.scale_bits(ns), 0)
+    if fuse:
+        gathered = comm.fused_all_gather(wires)
+        rec.n_collectives += 1
+    else:
+        gathered = [comm.all_gather(w) for w in wires]
+        rec.n_collectives += n
+
+    outs = []
+    for g, x, safe in zip(gathered, xs, safes):
+        codes = codec.decode(g, x.size).reshape((g.shape[0],) + x.shape)
+        if avg_mode == "paper":
+            val = codec.expand(jnp.mean(codes, axis=0))
+        else:
+            val = jnp.mean(codec.expand(codes), axis=0)
+        outs.append(_rescale(val, safe))
+    return outs

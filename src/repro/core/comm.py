@@ -19,7 +19,32 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-__all__ = ["AxisComm", "CommRecord"]
+__all__ = ["AxisComm", "CommRecord", "shard_map"]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: bool = False):
+    """Version-tolerant ``jax.shard_map``.
+
+    jax >= 0.6 exposes ``jax.shard_map(f, mesh=..., axis_names=...,
+    check_vma=...)`` with partially-manual axes: names outside
+    ``axis_names`` stay auto (XLA partitions the tensor-parallel math).
+    Older releases route to ``jax.experimental.shard_map.shard_map``,
+    where partial-auto (`auto=`) exists but its SPMD partitioner is not
+    reliable (hard ``IsManualSubgroup`` CHECK failures on CPU) — so there
+    we run ALL axes manual: tensors spec'd ``P()`` replicate over the
+    would-be-auto axes and compute redundantly. Numerically identical,
+    no TP sharding speedup; acceptable for tests/CPU simulation.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
 
 
 @dataclasses.dataclass
@@ -49,7 +74,9 @@ class AxisComm:
     def size(self) -> int:
         n = 1
         for a in self.axis_names:
-            n *= jax.lax.axis_size(a)
+            # psum of a unit weak-typed scalar: the canonical axis-size
+            # query that works under both shard_map and vmap tracing
+            n *= int(jax.lax.psum(1, a))
         return n
 
     def psum(self, x: jax.Array) -> jax.Array:
@@ -68,5 +95,38 @@ class AxisComm:
         # (axis0, axis1, ..., *x.shape); then flatten the gathered axes.
         for a in reversed(self.axis_names):
             g = jax.lax.all_gather(g, a, axis=0)
-        n = self.size()
-        return g.reshape((n,) + x.shape)
+        return g.reshape((-1,) + x.shape)
+
+    def fused_all_gather(self, xs: list[jax.Array]) -> list[jax.Array]:
+        """ONE all-gather of every payload in ``xs``, concatenated flat.
+
+        All arrays must share a dtype (one wire phase = one code dtype).
+        Returns per-input gathered arrays of shape ``(N, x.size)`` — exactly
+        what per-tensor ``all_gather(x.reshape(-1))`` calls would return,
+        but with a single collective on the interconnect.
+        """
+        if not xs:
+            return []
+        if len({x.dtype for x in xs}) != 1:
+            raise ValueError("fused_all_gather requires a single dtype; got "
+                             f"{[str(x.dtype) for x in xs]}")
+        flat = jnp.concatenate([x.reshape(-1) for x in xs])
+        g = self.all_gather(flat)  # (N, total)
+        outs, off = [], 0
+        for x in xs:
+            outs.append(g[:, off:off + x.size])
+            off += x.size
+        return outs
+
+    def fused_pmax(self, xs: list[jax.Array]) -> list[jax.Array]:
+        """ONE pmax over every (small) tensor in ``xs``; shapes preserved.
+        Used to fuse the per-tensor quantization-scale reductions."""
+        if not xs:
+            return []
+        flat = jnp.concatenate([x.reshape(-1).astype(jnp.float32) for x in xs])
+        m = self.pmax(flat)
+        outs, off = [], 0
+        for x in xs:
+            outs.append(m[off:off + x.size].reshape(x.shape))
+            off += x.size
+        return outs

@@ -62,8 +62,11 @@ class CompressorConfig:
     topk_ratio: float = 0.01
     # routing
     min_compress_numel: int = 1024
-    # wire modelling: 'allgather_codes' (exact uint8 wire) or 'psum_sim'
+    # wire modelling: 'allgather_codes' (exact packed wire) or 'psum_sim'
     wire: str = "allgather_codes"
+    # wire-codec backend: 'jnp_ref' (pure jnp) or 'pallas' (TPU kernels,
+    # interpret-mode off-TPU) — see repro.core.codec
+    quant_backend: str = "jnp_ref"
     # 'paper' = dequant(mean(codes))  [Algorithm 1 literal]
     # 'dequant_then_mean' = mean(dequant(codes))  [beyond-paper ablation]
     avg_mode: str = "paper"
@@ -205,13 +208,15 @@ class TopKCompressor(GradCompressor):
         return max(1, int(numel * self.cfg.topk_ratio))
 
     def sync(self, grads, state, comm):
+        from repro.core.codec import Float32Codec, codec_phase
         rec = CommRecord()
         leaves = jax.tree_util.tree_flatten(grads)[0]
         new_err = dict(state["err"])
-        out = []
+        out: list = [None] * len(leaves)
+        comp, kepts, account = [], [], []
         for i, (g, pl) in enumerate(zip(leaves, self.plans)):
             if pl.route != "lowrank":
-                out.append(self._raw_sync(g, comm, rec))
+                out[i] = self._raw_sync(g, comm, rec)
                 continue
             e = state["err"][str(i)]
             g32 = g.astype(jnp.float32) + e
@@ -221,9 +226,19 @@ class TopKCompressor(GradCompressor):
             mask = jnp.zeros_like(flat).at[idx].set(1.0)
             kept = flat * mask
             new_err[str(i)] = (flat - kept).reshape(pl.shape)
-            rec.add(k * 64, 1)  # (value, index) pairs on the wire
-            synced = comm.pmean(kept).reshape(pl.shape)
-            out.append(synced.astype(g.dtype))
+            comp.append((i, g, pl))
+            kepts.append(kept.reshape(pl.shape))
+            account.append(k * 64)  # (value, index) pairs on the wire
+        if comp:
+            # dense simulation of the sparse all-reduce through the fp32
+            # codec; accounting charges the k*(32+32)-bit sparse payload
+            synced = codec_phase(kepts, [pl.stacked for _, _, pl in comp],
+                                 Float32Codec(), comm, rec,
+                                 avg_mode=self.cfg.avg_mode, wire=self.cfg.wire,
+                                 fuse=self.cfg.fuse_collectives,
+                                 account_bits=account)
+            for (i, g, pl), s in zip(comp, synced):
+                out[i] = s.astype(g.dtype)
         return (jax.tree_util.tree_unflatten(self.treedef, out),
                 {"err": new_err}, rec)
 
@@ -251,40 +266,51 @@ class QSGDCompressor(GradCompressor):
     def init_state(self, key: jax.Array) -> PyTree:
         return {"key": key, "step": jnp.zeros((), jnp.int32)}
 
+    def _codec(self):
+        from repro.core.codec import QSGDCodec
+        return QSGDCodec(bits=self.cfg.bits, backend=self.cfg.quant_backend)
+
     def sync(self, grads, state, comm):
+        from repro.core.codec import codec_phase
         rec = CommRecord()
-        cfg = self.cfg
-        s_levels = (1 << (cfg.bits - 1)) - 1
         leaves = jax.tree_util.tree_flatten(grads)[0]
         base = jax.random.fold_in(state["key"], state["step"])
         # independent stochastic rounding per worker
         base = jax.random.fold_in(base, jax.lax.axis_index(comm.axis_names[-1]))
-        out = []
+        out: list = [None] * len(leaves)
+        comp = []
         for i, (g, pl) in enumerate(zip(leaves, self.plans)):
             if pl.route != "lowrank":
-                out.append(self._raw_sync(g, comm, rec))
-                continue
-            g32 = g.astype(jnp.float32)
-            scale = comm.pmax(jnp.max(jnp.abs(g32)))
-            scale = jnp.where(scale > 0, scale, 1.0)
-            y = jnp.abs(g32) / scale * s_levels
-            lo = jnp.floor(y)
-            key = jax.random.fold_in(base, i)
-            p = y - lo
-            rnd = jax.random.uniform(key, g32.shape)
-            q = (lo + (rnd < p)) * jnp.sign(g32)  # in [-s, s]
-            rec.add(g32.size * cfg.bits + 32, 1)
-            synced = comm.pmean(q) * scale / s_levels
-            out.append(synced.astype(g.dtype))
-        return jax.tree_util.tree_unflatten(self.treedef, out), state, rec
+                out[i] = self._raw_sync(g, comm, rec)
+            else:
+                comp.append((i, g, pl))
+        if comp:
+            # stochastic rounding is unbiased under plain averaging; the
+            # linear QSGD codec makes both avg modes identical anyway
+            synced = codec_phase(
+                [g for _, g, _ in comp], [pl.stacked for _, _, pl in comp],
+                self._codec(), comm, rec, avg_mode="dequant_then_mean",
+                wire=self.cfg.wire, fuse=self.cfg.fuse_collectives,
+                keys=[jax.random.fold_in(base, i) for i, _, _ in comp])
+            for (i, g, pl), s in zip(comp, synced):
+                out[i] = s.astype(g.dtype)
+        # advance the PRNG stream: without this, every sync re-draws the
+        # SAME stochastic rounding (regression-tested)
+        new_state = {"key": state["key"], "step": state["step"] + 1}
+        return jax.tree_util.tree_unflatten(self.treedef, out), new_state, rec
 
     def wire_bits_per_step(self) -> int:
         rec = CommRecord()
+        codec = self._codec()
         for pl in self.plans:
             numel = 1
             for s in pl.shape:
                 numel *= s
-            rec.add(numel * (self.cfg.bits if pl.route == "lowrank" else 32))
+            if pl.route == "lowrank":
+                L = pl.shape[0] if pl.stacked else 1
+                rec.add(codec.wire_bits(numel) + codec.scale_bits(L))
+            else:
+                rec.add(numel * 32)
         return rec.bits_sent
 
 

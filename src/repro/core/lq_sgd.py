@@ -1,16 +1,27 @@
 """LQ-SGD — the paper's Algorithm 1 (PowerSGD + logarithmic quantization).
 
-Identical control flow to :class:`PowerSGDCompressor`; the two factor
-all-reduces go over a b-bit log-quantized wire (paper Eq. 5/6):
+Identical control flow to :class:`PowerSGDCompressor` — literally the same
+``sync`` — with the factor wire swapped from fp32 to the b-bit log-quantized
+:class:`~repro.core.codec.LogQuantCodec` (paper Eq. 5/6):
 
     scale  = pmax_i max|x_i|                       (shared quantization grid)
     codes  = round( log1p(a|x|/s) / log1p(a) * L ) (signed b-bit integers)
-    wire   = all_gather(codes)   or   psum-simulated ring all-reduce
+    wire   = all_gather(packed codes)  or  psum-simulated ring all-reduce
     mean   = dequant(mean(codes))                  ["paper", Alg.1 literal]
            | mean(dequant(codes))                  ["dequant_then_mean"]
 
+``cfg.quant_backend`` selects the codec backend: ``jnp_ref`` (pure jnp) or
+``pallas`` (the fused TPU kernels, interpret-mode off-TPU). b<=4 codes are
+nibble-packed two-per-int8, so the gathered arrays really are b/8 of the
+int8 bytes — wire accounting equals actual array bytes.
+
 Stacked (layer-scanned) tensors quantize with per-layer scales — the exact
 equivalent of per-tensor scales in an unrolled network.
+
+Non-low-rank tensors (biases, norms — PowerSGD's 'rank-1' path) are ALSO
+log-quantized to b bits before their all-reduce: this is what reconciles
+the paper's Table-I LQ-SGD sizes (3 MB vs PowerSGD 14 MB = the full 32/b
+on *everything*, not just factors).
 
 Wire accounting: b bits/scalar + 32-bit scale per tensor instance, i.e.
 ``r(n+m)·b`` bits per compressed matrix — the paper's §IV-C claim of a
@@ -18,125 +29,20 @@ Wire accounting: b bits/scalar + 32-bit scale per tensor instance, i.e.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.comm import AxisComm, CommRecord
+from repro.core.codec import LogQuantCodec, WireCodec, codec_phase
 from repro.core.powersgd import PowerSGDCompressor
-from repro.core.quantization import (
-    LogQuantConfig,
-    code_dtype,
-    log_expand,
-    quantize,
-)
 
 __all__ = ["LQSGDCompressor"]
 
 
 class LQSGDCompressor(PowerSGDCompressor):
-    """See module docstring. With ``cfg.fuse_collectives=True`` the per-
-    tensor factor all-gathers are batched into ONE flat int8 gather per
-    power-iteration phase (P-phase, Q-phase): collective COUNT per step
-    drops from 2x n_compressed_tensors to 2, amortizing per-collective
-    latency on real interconnects (beyond-paper; bytes unchanged;
-    numerically identical to the unfused path — tested)."""
+    """See module docstring: PowerSGD control flow over a log-quantized wire."""
 
-    # -------- fused-phase machinery ----------------------------------------
-    def _phase_allreduce(self, xs: list, comm, rec, bits: int,
-                         stacked_flags: list) -> list:
-        """Quantize every tensor in `xs`, run ONE fused all-gather of the
-        concatenated codes, return the per-tensor averaged factors."""
-        from repro.core.quantization import quantize as _q
-        qcfg = LogQuantConfig(bits=bits, alpha=self.cfg.alpha)
-        codes, scales, shapes = [], [], []
-        for x, st in zip(xs, stacked_flags):
-            if st:
-                local = jnp.max(jnp.abs(x), axis=tuple(range(1, x.ndim)),
-                                keepdims=True)
-            else:
-                local = jnp.max(jnp.abs(x))
-            scale = comm.pmax(local)
-            safe = jnp.where(scale > 0, scale, 1.0)
-            codes.append(_q(x / safe, qcfg).reshape(-1))
-            scales.append(safe)
-            shapes.append(x.shape)
-            rec.add(x.size * bits + 32 * scale.size, 0)
-        rec.n_collectives += 1
-        flat = jnp.concatenate(codes)
-        gathered = comm.all_gather(flat)            # (N, total) int8 — fused
-        outs = []
-        off = 0
-        for shape, safe in zip(shapes, scales):
-            n = 1
-            for s in shape:
-                n *= s
-            seg = gathered[:, off:off + n].reshape((gathered.shape[0],) + shape)
-            off += n
-            if self.cfg.avg_mode == "paper":
-                mean_code = jnp.mean(seg.astype(jnp.float32), axis=0)
-                val = log_expand(mean_code / qcfg.levels, qcfg.alpha)
-            else:
-                val = jnp.mean(log_expand(seg.astype(jnp.float32) / qcfg.levels,
-                                          qcfg.alpha), axis=0)
-            outs.append(val * safe)
-        return outs
-
-    def sync(self, grads, state, comm):
-        if not self.cfg.fuse_collectives:
-            return super().sync(grads, state, comm)
-        from repro.core.comm import CommRecord
-        from repro.core.low_rank import orthonormalize
-        rec = CommRecord()
-        leaves = jax.tree_util.tree_flatten(grads)[0]
-        new_err = dict(state["err"])
-        new_q = dict(state["q"])
-        out: list = [None] * len(leaves)
-        comp = [(i, g, pl) for i, (g, pl) in enumerate(zip(leaves, self.plans))
-                if pl.route == "lowrank"]
-        for i, g, pl in [(i, g, pl) for i, (g, pl)
-                         in enumerate(zip(leaves, self.plans))
-                         if pl.route != "lowrank"]:
-            out[i] = self._raw_sync(g, comm, rec)
-        # ---- P phase (fused) ----
-        g_efs, ps, flags = [], [], []
-        for i, g, pl in comp:
-            n, m = pl.mat_shape
-            shp = (pl.shape[0], n, m) if pl.stacked else (n, m)
-            g_ef = (g.astype(jnp.float32).reshape(shp)
-                    + state["err"][str(i)].astype(jnp.float32).reshape(shp))
-            q = state["q"][str(i)]
-            p = (jnp.einsum("lnm,lmr->lnr", g_ef, q) if pl.stacked
-                 else g_ef @ q)
-            g_efs.append(g_ef)
-            ps.append(p)
-            flags.append(pl.stacked)
-        ps = self._phase_allreduce(ps, comm, rec, self._bits_p(), flags)
-        # ---- orth + Q phase (fused) ----
-        qs = []
-        p_hats = []
-        for (i, g, pl), g_ef, p in zip(comp, g_efs, ps):
-            p_hat = (jax.vmap(orthonormalize)(p) if pl.stacked
-                     else orthonormalize(p))
-            p_hats.append(p_hat)
-            qs.append(jnp.einsum("lnm,lnr->lmr", g_ef, p_hat) if pl.stacked
-                      else g_ef.T @ p_hat)
-        qs = self._phase_allreduce(qs, comm, rec, self._bits_q(), flags)
-        # ---- reconstruct + EF ----
-        for (i, g, pl), g_ef, p_hat, q_new in zip(comp, g_efs, p_hats, qs):
-            g_hat = (jnp.einsum("lnr,lmr->lnm", p_hat, q_new) if pl.stacked
-                     else p_hat @ q_new.T)
-            new_err[str(i)] = (g_ef - g_hat).reshape(pl.shape).astype(
-                jnp.dtype(self.cfg.state_dtype))
-            new_q[str(i)] = q_new
-            out[i] = g_hat.reshape(pl.shape).astype(g.dtype)
-        synced = jax.tree_util.tree_unflatten(self.treedef, out)
-        return synced, {"err": new_err, "q": new_q}, rec
-    """Paper Algorithm 1: low-rank factors + log-quantized all-reduce.
-
-    Non-low-rank tensors (biases, norms — PowerSGD's 'rank-1' path) are
-    ALSO log-quantized to b bits before their all-reduce: this is what
-    reconciles the paper's Table-I LQ-SGD sizes (3 MB vs PowerSGD 14 MB =
-    the full 32/b on *everything*, not just factors)."""
+    def _wire_codec(self, bits: int) -> WireCodec:
+        return LogQuantCodec(bits=bits, alpha=self.cfg.alpha,
+                             backend=self.cfg.quant_backend)
 
     def _bits_p(self) -> int:
         return self.cfg.bits
@@ -145,59 +51,16 @@ class LQSGDCompressor(PowerSGDCompressor):
         return self.cfg.bits_q if self.cfg.bits_q is not None else self.cfg.bits
 
     def _raw_sync(self, g, comm, rec):
-        dt = g.dtype
-        out = self._factor_allreduce(g.astype(jnp.float32), comm, rec,
-                                     self.cfg.bits, stacked=False)
-        return out.astype(dt)
+        # Algorithm 1's code-domain mean applies to the low-rank factors;
+        # for raw leaves (biases/norms, sign-mixed small tensors) the
+        # log-domain mean is badly biased (a quasi-geometric mean), so the
+        # quantized raw path always averages dequantized values.
+        out = codec_phase([g.astype(jnp.float32)], [False],
+                          self._wire_codec(self.cfg.bits), comm, rec,
+                          avg_mode="dequant_then_mean", wire=self.cfg.wire,
+                          fuse=False)[0]
+        return out.astype(g.dtype)
 
-    def wire_bits_per_step(self) -> int:
-        from repro.core.comm import CommRecord as _CR
-        rec = _CR()
-        bp, bq = self._bits_p(), self._bits_q()
-        for pl in self.plans:
-            numel = 1
-            for s in pl.shape:
-                numel *= s
-            if pl.route != "lowrank":
-                rec.add(numel * self.cfg.bits + 32)   # quantized raw path
-                continue
-            n, m = pl.mat_shape
-            r = pl.eff_rank
-            L = pl.shape[0] if pl.stacked else 1
-            rec.add(L * n * r * bp + 32 * L)
-            rec.add(L * m * r * bq + 32 * L)
-        return rec.bits_sent
-
-    def _factor_allreduce(self, x: jax.Array, comm: AxisComm, rec: CommRecord,
-                          bits: int, stacked: bool) -> jax.Array:
-        qcfg = LogQuantConfig(bits=bits, alpha=self.cfg.alpha)
-        # Per-instance scale: global over the tensor, per-layer when stacked.
-        if stacked:
-            local = jnp.max(jnp.abs(x), axis=tuple(range(1, x.ndim)), keepdims=True)
-        else:
-            local = jnp.max(jnp.abs(x))
-        scale = comm.pmax(local)
-        safe = jnp.where(scale > 0, scale, 1.0)
-        codes = quantize(x / safe, qcfg)  # signed b-bit ints
-
-        n_scales = scale.size
-        rec.add(x.size * bits + 32 * n_scales, 1)
-
-        if self.cfg.wire == "allgather_codes":
-            gathered = comm.all_gather(codes)  # (N, ...) int8/int16 on the wire
-            if self.cfg.avg_mode == "paper":
-                mean_code = jnp.mean(gathered.astype(jnp.float32), axis=0)
-                val = log_expand(mean_code / qcfg.levels, qcfg.alpha)
-            else:  # dequant_then_mean
-                deq = log_expand(gathered.astype(jnp.float32) / qcfg.levels, qcfg.alpha)
-                val = jnp.mean(deq, axis=0)
-        elif self.cfg.wire == "psum_sim":
-            if self.cfg.avg_mode == "paper":
-                mean_code = comm.pmean(codes.astype(jnp.float32))
-                val = log_expand(mean_code / qcfg.levels, qcfg.alpha)
-            else:
-                deq = log_expand(codes.astype(jnp.float32) / qcfg.levels, qcfg.alpha)
-                val = comm.pmean(deq)
-        else:
-            raise ValueError(f"unknown wire mode {self.cfg.wire!r}")
-        return val * safe
+    def _raw_wire_bits(self, numel: int) -> int:
+        codec = self._wire_codec(self.cfg.bits)
+        return codec.wire_bits(numel) + codec.scale_bits(1)

@@ -5,10 +5,15 @@ Warm-started single power iteration with error feedback:
     G' = G + E ;  P = G'Q ;  allreduce(P) ;  P^ = orth(P)
     Q  = G'^T P^ ;  allreduce(Q) ;  G^ = P^ Q^T ;  E = G' - G^
 
-Factors are all-reduced in fp32 (LQ-SGD subclasses this and overrides
-``_factor_allreduce`` with the b-bit log-quantized wire). Stacked (L, n, m)
-tensors are compressed per-layer via vmap — equivalent to per-layer PowerSGD
-in an unrolled network.
+Both factor phases ship through the wire-codec layer
+(:func:`repro.core.codec.codec_phase`): PowerSGD uses the fp32
+:class:`~repro.core.codec.Float32Codec`; LQ-SGD subclasses this and swaps
+in the b-bit :class:`~repro.core.codec.LogQuantCodec` — control flow is
+shared, only ``_wire_codec`` differs.  With ``cfg.fuse_collectives=True``
+each phase's per-tensor gathers batch into ONE flat collective (2 + n_raw
+collectives per step, numerically identical to the unfused path — tested).
+Stacked (L, n, m) tensors are compressed per-layer via vmap — equivalent to
+per-layer PowerSGD in an unrolled network.
 
 Distributed-correctness invariants (tested):
   * warm-start Q is initialized from the SAME key on every worker, so all
@@ -24,6 +29,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core.codec import Float32Codec, WireCodec, codec_phase
 from repro.core.comm import AxisComm, CommRecord
 from repro.core.compressors import GradCompressor, LeafPlan
 from repro.core.low_rank import orthonormalize
@@ -31,6 +37,23 @@ from repro.core.low_rank import orthonormalize
 __all__ = ["PowerSGDCompressor"]
 
 PyTree = Any
+
+
+def _mat_ops(pl: LeafPlan):
+    """(to_2d, P-matmul, Q-matmul, orth, reconstruct) for a leaf plan."""
+    n, m = pl.mat_shape
+    if pl.stacked:
+        shp = (pl.shape[0], n, m)
+        return (shp,
+                lambda a, b: jnp.einsum("lnm,lmr->lnr", a, b),
+                lambda a, b: jnp.einsum("lnm,lnr->lmr", a, b),
+                jax.vmap(orthonormalize),
+                lambda p, q: jnp.einsum("lnr,lmr->lnm", p, q))
+    return ((n, m),
+            lambda a, b: a @ b,
+            lambda a, b: a.T @ b,
+            orthonormalize,
+            lambda p, q: p @ q.T)
 
 
 class PowerSGDCompressor(GradCompressor):
@@ -54,13 +77,11 @@ class PowerSGDCompressor(GradCompressor):
             err[str(i)] = jnp.zeros(pl.shape, edt)
         return {"err": err, "q": q}
 
-    # ----------------------------------------------------- wire (overridden)
-    def _factor_allreduce(self, x: jax.Array, comm: AxisComm, rec: CommRecord,
-                          bits: int, stacked: bool) -> jax.Array:
-        """fp32 factor all-reduce (PowerSGD wire). Returns the mean factor."""
-        del bits, stacked
-        rec.add(x.size * 32, 1)
-        return comm.pmean(x)
+    # ---------------------------------------------------------------- wire
+    def _wire_codec(self, bits: int) -> WireCodec:
+        """The factor wire. PowerSGD: raw fp32 (overridden by LQ-SGD)."""
+        del bits
+        return Float32Codec()
 
     def _bits_p(self) -> int:
         return 32
@@ -68,69 +89,71 @@ class PowerSGDCompressor(GradCompressor):
     def _bits_q(self) -> int:
         return 32
 
+    def _phase(self, xs: list, flags: list, bits: int, comm: AxisComm,
+               rec: CommRecord) -> list:
+        return codec_phase(xs, flags, self._wire_codec(bits), comm, rec,
+                           avg_mode=self.cfg.avg_mode, wire=self.cfg.wire,
+                           fuse=self.cfg.fuse_collectives)
+
     # ----------------------------------------------------------------- sync
     def sync(self, grads: PyTree, state: PyTree, comm: AxisComm):
         rec = CommRecord()
         leaves = jax.tree_util.tree_flatten(grads)[0]
         new_err = dict(state["err"])
         new_q = dict(state["q"])
-        out = []
+        out: list = [None] * len(leaves)
+        comp = []
         for i, (g, pl) in enumerate(zip(leaves, self.plans)):
-            if pl.route != "lowrank":
-                out.append(self._raw_sync(g, comm, rec))
-                continue
-            si = str(i)
-            g_hat, e, q = self._compress_leaf(
-                g, state["err"][si], state["q"][si], pl, comm, rec)
-            new_err[si], new_q[si] = e, q
-            out.append(g_hat.astype(g.dtype))
+            if pl.route == "lowrank":
+                comp.append((i, g, pl))
+            else:
+                out[i] = self._raw_sync(g, comm, rec)
+        if comp:
+            flags = [pl.stacked for _, _, pl in comp]
+            ops = [_mat_ops(pl) for _, _, pl in comp]
+            # ---- P phase ----
+            g_efs, ps = [], []
+            for (i, g, pl), (shp, mm_p, _, _, _) in zip(comp, ops):
+                g_ef = (g.astype(jnp.float32).reshape(shp)
+                        + state["err"][str(i)].astype(jnp.float32).reshape(shp))
+                g_efs.append(g_ef)                                # Alg.1 l.4
+                ps.append(mm_p(g_ef, state["q"][str(i)]))         # Alg.1 l.10
+            ps = self._phase(ps, flags, self._bits_p(), comm, rec)
+            # ---- orthonormalize + Q phase ----
+            p_hats, qs = [], []
+            for (_, mm_p, mm_q, orth, _), g_ef, p in zip(ops, g_efs, ps):
+                p_hat = orth(p)                                   # Alg.1 l.11
+                p_hats.append(p_hat)
+                qs.append(mm_q(g_ef, p_hat))                      # Alg.1 l.15
+            qs = self._phase(qs, flags, self._bits_q(), comm, rec)
+            # ---- reconstruct + error feedback ----
+            for (i, g, pl), (_, _, _, _, recon), g_ef, p_hat, q_new in zip(
+                    comp, ops, g_efs, p_hats, qs):
+                g_hat = recon(p_hat, q_new)                       # Alg.1 l.19
+                new_err[str(i)] = (g_ef - g_hat).reshape(pl.shape).astype(
+                    jnp.dtype(self.cfg.state_dtype))              # Alg.1 l.20
+                new_q[str(i)] = q_new
+                out[i] = g_hat.reshape(pl.shape).astype(g.dtype)
         synced = jax.tree_util.tree_unflatten(self.treedef, out)
         return synced, {"err": new_err, "q": new_q}, rec
-
-    def _compress_leaf(self, g: jax.Array, err: jax.Array, q: jax.Array,
-                       pl: LeafPlan, comm: AxisComm, rec: CommRecord):
-        n, m = pl.mat_shape
-        if pl.stacked:
-            L = pl.shape[0]
-            g2d = g.astype(jnp.float32).reshape(L, n, m)
-            err2d = err.astype(jnp.float32).reshape(L, n, m)
-            matmul_pq = lambda a, b: jnp.einsum("lnm,lmr->lnr", a, b)
-            matmul_qp = lambda a, b: jnp.einsum("lnm,lnr->lmr", a, b)
-            orth = jax.vmap(orthonormalize)
-            recon = lambda p, qq: jnp.einsum("lnr,lmr->lnm", p, qq)
-        else:
-            g2d = g.astype(jnp.float32).reshape(n, m)
-            err2d = err.astype(jnp.float32).reshape(n, m)
-            matmul_pq = lambda a, b: a @ b
-            matmul_qp = lambda a, b: a.T @ b
-            orth = orthonormalize
-            recon = lambda p, qq: p @ qq.T
-
-        g_ef = g2d + err2d                                   # Alg.1 l.4
-        p = matmul_pq(g_ef, q)                               # Alg.1 l.10
-        p = self._factor_allreduce(p, comm, rec, self._bits_p(), pl.stacked)
-        p_hat = orth(p)                                      # Alg.1 l.11
-        q_new = matmul_qp(g_ef, p_hat)                       # Alg.1 l.15
-        q_new = self._factor_allreduce(q_new, comm, rec, self._bits_q(), pl.stacked)
-        g_hat = recon(p_hat, q_new)                          # Alg.1 l.19
-        e_new = (g_ef - g_hat).reshape(pl.shape)             # Alg.1 l.20
-        e_new = e_new.astype(jnp.dtype(self.cfg.state_dtype))
-        return g_hat.reshape(pl.shape), e_new, q_new
 
     # ----------------------------------------------------------- accounting
     def wire_bits_per_step(self) -> int:
         rec = CommRecord()
-        bp, bq = self._bits_p(), self._bits_q()
+        cp, cq = self._wire_codec(self._bits_p()), self._wire_codec(self._bits_q())
         for pl in self.plans:
             numel = 1
             for s in pl.shape:
                 numel *= s
             if pl.route != "lowrank":
-                rec.add(numel * 32)
+                rec.add(self._raw_wire_bits(numel))
                 continue
             n, m = pl.mat_shape
             r = pl.eff_rank
             L = pl.shape[0] if pl.stacked else 1
-            rec.add(L * n * r * bp + (32 * L if bp < 32 else 0))  # P (+ scales)
-            rec.add(L * m * r * bq + (32 * L if bq < 32 else 0))  # Q (+ scales)
+            rec.add(cp.wire_bits(L * n * r) + cp.scale_bits(L))  # P (+ scales)
+            rec.add(cq.wire_bits(L * m * r) + cq.scale_bits(L))  # Q (+ scales)
         return rec.bits_sent
+
+    def _raw_wire_bits(self, numel: int) -> int:
+        return numel * 32

@@ -7,8 +7,9 @@ TPU is the compile target).
 """
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.log_quant import log_dequantize_pallas, log_quantize_pallas
+from repro.kernels.log_quant import (log_dequantize_pallas, log_quantize_pallas,
+                                     pack_nibbles_pallas)
 from repro.kernels.ssd_chunk import ssd_chunk_pallas
 
 __all__ = ["ops", "ref", "flash_attention_pallas", "log_quantize_pallas",
-           "log_dequantize_pallas", "ssd_chunk_pallas"]
+           "log_dequantize_pallas", "pack_nibbles_pallas", "ssd_chunk_pallas"]

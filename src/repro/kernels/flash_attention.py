@@ -120,7 +120,9 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((bq, 1), jnp.float32),   # running max m
             pltpu.VMEM((bq, 1), jnp.float32),   # running denom l
         ],
-        compiler_params=pltpu.CompilerParams(
+        # jax >= 0.5 renamed TPUCompilerParams -> CompilerParams
+        compiler_params=getattr(pltpu, "CompilerParams",
+                                getattr(pltpu, "TPUCompilerParams", None))(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

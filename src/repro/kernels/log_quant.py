@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["log_quantize_pallas", "log_dequantize_pallas"]
+__all__ = ["log_quantize_pallas", "log_dequantize_pallas", "pack_nibbles_pallas"]
 
 
 def _quantize_kernel(x_ref, scale_ref, o_ref, *, alpha: float, levels: int):
@@ -80,6 +80,48 @@ def log_quantize_pallas(x: jax.Array, scale: jax.Array, *, bits: int = 8,
         out_shape=jax.ShapeDtypeStruct((rows, cols), out_dtype),
         interpret=interpret,
     )(x2, scale2)
+    return _unpad(y2, shape, n)
+
+
+def _pack_kernel(lo_ref, hi_ref, o_ref):
+    """Two 4-bit two's-complement codes -> one int8 byte (lo | hi << 4).
+
+    Purely elementwise on the VPU: the even/odd interleave split happens in
+    XLA outside the kernel, so no in-kernel relayout is needed."""
+    lo = lo_ref[...].astype(jnp.int32)
+    hi = hi_ref[...].astype(jnp.int32)
+    o_ref[...] = ((lo & 0xF) | ((hi & 0xF) << 4)).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def pack_nibbles_pallas(codes: jax.Array, *, block: tuple[int, int] = (256, 512),
+                        interpret: bool = True) -> jax.Array:
+    """Signed 4-bit codes (int8 storage, any shape) -> packed int8 bytes.
+
+    Byte ``i`` holds ``codes[2i]`` in its low nibble and ``codes[2i+1]`` in
+    its high nibble — the same layout as the jnp reference packer in
+    ``repro.core.codec``, so the two backends produce identical wire bytes.
+    Output is 1-D of length ``ceil(codes.size / 2)``.
+    """
+    flat = codes.reshape(-1).astype(jnp.int8)
+    if flat.size % 2:
+        flat = jnp.pad(flat, (0, 1))
+    lo, hi = flat[0::2], flat[1::2]
+    lo2, shape, n = _pad2d(lo, block)
+    hi2, _, _ = _pad2d(hi, block)
+    rows, cols = lo2.shape
+    grid = (rows // block[0], cols // block[1])
+    y2 = pl.pallas_call(
+        _pack_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(block, lambda i, j: (i, j)),
+            pl.BlockSpec(block, lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec(block, lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.int8),
+        interpret=interpret,
+    )(lo2, hi2)
     return _unpad(y2, shape, n)
 
 

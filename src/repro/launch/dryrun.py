@@ -29,7 +29,7 @@ from repro.configs import INPUT_SHAPES, get_config, list_archs, shape_supported
 from repro.configs.base import InputShape, ModelConfig
 from repro.core import CompressorConfig
 from repro.launch.inputs import input_specs
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, use_mesh
 from repro.launch.sharding import param_specs
 from repro.models.model import init_caches, init_params, stacked_flags
 from repro.roofline import hw
@@ -84,7 +84,7 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     comp_cfg = comp_cfg or CompressorConfig(name="lq_sgd", rank=1, bits=8)
     t0 = time.time()
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         if shape.mode == "train":
             compressor = make_model_compressor(cfg, comp_cfg)
             opt = sgd(1e-2)

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, list_archs
-from repro.launch.mesh import make_mesh, make_production_mesh
+from repro.launch.mesh import make_mesh, make_production_mesh, use_mesh
 from repro.models.model import init_params
 from repro.models.multimodal import codec_tokens_stub, conditioning_stub, vq_tokens_stub
 from repro.serving.engine import (build_decode_step, build_prefill_step,
@@ -53,7 +53,7 @@ def main() -> None:
                                     cfg.vocab_size)
     cond = (conditioning_stub(key, args.batch, cfg) if cfg.cond_len else None)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         params = init_params(cfg, jax.random.PRNGKey(1))
         prefill = jax.jit(build_prefill_step(cfg, max_seq,
                                              cache_dtype=jnp.float32))

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from repro.configs import get_config, list_archs
 from repro.core import CompressorConfig
 from repro.data.synthetic import LMDataConfig, lm_batch
-from repro.launch.mesh import make_mesh, make_production_mesh
+from repro.launch.mesh import make_mesh, make_production_mesh, use_mesh
 from repro.models.multimodal import conditioning_stub
 from repro.train.optimizer import make_optimizer
 from repro.train.step import (build_train_step, init_train_state,
@@ -85,7 +85,7 @@ def main() -> None:
             b["cond"] = conditioning_stub(jax.random.PRNGKey(step), args.batch, cfg)
         return b
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         state = init_train_state(cfg, jax.random.PRNGKey(0), optimizer,
                                  compressor, n_dp_of(mesh))
         jstep = jax.jit(step_fn, donate_argnums=0)

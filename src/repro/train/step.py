@@ -23,6 +23,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core import AxisComm, CompressorConfig, make_compressor
+from repro.core.comm import shard_map
 from repro.core.compressors import GradCompressor
 from repro.launch.sharding import param_specs
 from repro.models.model import init_params, stacked_flags
@@ -102,6 +103,11 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, compressor: GradCompressor,
         new_params, new_opt = optimizer.update(grads, state["opt"], params)
         metrics = {k: jax.lax.pmean(v, dp) for k, v in metrics.items()}
         metrics["wire_mb_per_step"] = jnp.full((), rec.megabytes, jnp.float32)
+        # collective COUNT is the latency-side cost the fused codec phases
+        # shrink (2 + n_raw per step when cfg.fuse_collectives) — surface it
+        # next to the byte-side cost so both regressions show up in logs
+        metrics["collectives_per_step"] = jnp.full((), rec.n_collectives,
+                                                   jnp.float32)
         new_state = dict(
             params=new_params, opt=new_opt,
             comp=jax.tree.map(lambda x: x[None], comp_local),
@@ -116,10 +122,10 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, compressor: GradCompressor,
         specs_state["comp"] = jax.tree.map(lambda _: P(dp), state["comp"])
         specs_batch = jax.tree.map(lambda _: P(dp), batch)
         metric_specs = {k: rep for k in _metric_keys(cfg)}
-        return jax.shard_map(per_dp, mesh=mesh,
-                             in_specs=(specs_state, specs_batch),
-                             out_specs=(specs_state, metric_specs),
-                             axis_names=set(dp), check_vma=False)(state, batch)
+        return shard_map(per_dp, mesh=mesh,
+                         in_specs=(specs_state, specs_batch),
+                         out_specs=(specs_state, metric_specs),
+                         axis_names=set(dp), check_vma=False)(state, batch)
 
     # ---- NamedShardings for jit / lower ----------------------------------
     abstract_params = jax.eval_shape(lambda k: init_params(cfg, k),
@@ -156,7 +162,7 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, compressor: GradCompressor,
 
 
 def _metric_keys(cfg: ModelConfig) -> list[str]:
-    keys = ["ce", "loss", "wire_mb_per_step"]
+    keys = ["ce", "loss", "wire_mb_per_step", "collectives_per_step"]
     if cfg.n_experts:
         keys.append("moe_aux")
     if cfg.mtp:

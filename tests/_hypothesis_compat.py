@@ -1,0 +1,69 @@
+"""Tiny fallback for the slice of hypothesis this repo's property tests use.
+
+When ``hypothesis`` is installed, test modules import it directly and this
+file is unused. On a clean env (no dev deps) the tests fall back to this
+shim: ``@given`` becomes a seeded random parameter sweep — weaker than real
+property testing (no shrinking, fixed seed), but the invariants still get
+exercised instead of the whole module dying at collection.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+__all__ = ["given", "settings", "strategies"]
+
+_DEFAULT_EXAMPLES = 20
+_MAX_EXAMPLES_CAP = 30  # keep the fallback sweep cheap
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+class strategies:  # mirrors `hypothesis.strategies` for the used subset
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+
+def settings(*, max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+    """Records max_examples on the (already-@given-wrapped) test."""
+
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = min(getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES),
+                    _MAX_EXAMPLES_CAP)
+            rng = random.Random(0xC0DEC)
+            for _ in range(n):
+                draws = {k: s.draw(rng) for k, s in strats.items()}
+                fn(*args, **draws, **kwargs)
+
+        # hide the drawn params from pytest's fixture resolution (like
+        # hypothesis does): expose only the non-strategy parameters
+        sig = inspect.signature(fn)
+        remaining = [p for name, p in sig.parameters.items()
+                     if name not in strats]
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        return wrapper
+
+    return deco

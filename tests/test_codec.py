@@ -1,0 +1,331 @@
+"""Parity suite for the wire-codec layer (repro.core.codec).
+
+The matrix the tentpole refactor must hold:
+  * fused == unfused sync, bit for bit, for ALL FOUR compressors;
+  * jnp_ref == pallas(interpret) codec backends over bits in {4, 8, 16},
+    stacked and unstacked tensors — identical wire bytes, equal decodes;
+  * b<=4 wire arrays are nibble-packed: gathered bytes == static
+    ``wire_bits_per_step`` accounting (packing verified, not bookkept);
+  * fused collective count is 2 + n_raw per step (one per phase);
+  * QSGD's PRNG stream advances every sync (stale-randomness regression).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AxisComm, CompressorConfig, make_compressor
+from repro.core.codec import (
+    Float32Codec,
+    LogQuantCodec,
+    QSGDCodec,
+    codec_phase,
+    pack_nibbles,
+    packed_wire_bits,
+    unpack_nibbles,
+)
+from repro.core.comm import CommRecord
+from repro.kernels.log_quant import pack_nibbles_pallas
+
+from conftest import broadcast_state
+
+N = 4
+FOUR = ["topk", "qsgd", "powersgd", "lq_sgd"]
+STACKED = {"w": False, "b": False, "scan": True}
+
+
+def _grads(key, n=N):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w": jax.random.normal(k1, (n, 64, 32)),
+        "b": jax.random.normal(k2, (n, 32)),
+        "scan": jax.random.normal(k3, (n, 3, 48, 16)),
+    }
+
+
+def _abstract(grads):
+    return {k: jax.ShapeDtypeStruct(v.shape[1:], v.dtype) for k, v in grads.items()}
+
+
+def _sync(name, grads, steps=1, n=N, collect_recs=None, **cfg_kw):
+    cfg_kw = {"bits": 8, "alpha": 10.0, **cfg_kw}
+    cfg = CompressorConfig(name=name, rank=2, **cfg_kw)
+    comp = make_compressor(cfg, _abstract(grads), STACKED)
+    state = broadcast_state(comp.init_state(jax.random.PRNGKey(42)), n)
+
+    def worker(g, st):
+        out, st2, rec = comp.sync(g, st, AxisComm(("data",)))
+        if collect_recs is not None:
+            collect_recs.append(rec)
+        return out, st2
+
+    wf = jax.jit(jax.vmap(worker, axis_name="data"))
+    out = None
+    for _ in range(steps):
+        out, state = wf(grads, state)
+    return comp, out, state
+
+
+# ------------------------------------------------------------- bit packing
+@pytest.mark.parametrize("numel", [1, 2, 7, 100, 101, 4096])
+def test_pack_unpack_roundtrip(numel):
+    rng = np.random.default_rng(numel)
+    codes = jnp.asarray(rng.integers(-8, 8, size=numel), jnp.int8)
+    packed = pack_nibbles(codes)
+    assert packed.dtype == jnp.int8
+    assert packed.size == (numel + 1) // 2  # two codes per byte, really
+    back = unpack_nibbles(packed, numel)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(codes, np.int32))
+
+
+def test_pallas_pack_matches_jnp():
+    rng = np.random.default_rng(0)
+    for numel in (2, 63, 1000):
+        codes = jnp.asarray(rng.integers(-8, 8, size=numel), jnp.int8)
+        got = pack_nibbles_pallas(codes, interpret=True)
+        want = pack_nibbles(codes)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_unpack_handles_leading_axes():
+    codes = jnp.asarray(np.arange(-6, 6), jnp.int8)  # 12 codes
+    packed = pack_nibbles(codes)
+    stacked = jnp.stack([packed, packed])  # (2, 6) as after all_gather
+    back = unpack_nibbles(stacked, 12)
+    assert back.shape == (2, 12)
+    np.testing.assert_array_equal(np.asarray(back[1]), np.asarray(codes, np.int32))
+
+
+# ------------------------------------------------- backend equivalence
+@pytest.mark.parametrize("bits", [4, 8, 16])
+@pytest.mark.parametrize("stacked", [False, True])
+def test_log_codec_backends_agree(bits, stacked):
+    """jnp_ref and pallas(interpret) share the packing layout, wire dtype
+    and quantization grid. Codes may disagree by at most ONE level at a
+    tiny fraction of rounding-boundary points (eager vs jit compilation
+    rounds 1-ULP-apart pre-round values differently); decodes agree to
+    within one quantization bin."""
+    shape = (3, 37, 13) if stacked else (129, 7)
+    x = jax.random.normal(jax.random.PRNGKey(bits), shape)
+    xn = x / jnp.max(jnp.abs(x))
+    cj = LogQuantCodec(bits=bits, backend="jnp_ref")
+    cp = LogQuantCodec(bits=bits, backend="pallas")
+    wj, wp = cj.encode(xn), cp.encode(xn)
+    assert wj.dtype == wp.dtype and wj.shape == wp.shape
+    assert wj.size * wj.dtype.itemsize * 8 == cj.wire_bits(x.size)
+    codes_j = np.asarray(cj.decode(wj, x.size))
+    codes_p = np.asarray(cp.decode(wp, x.size))
+    diff = np.abs(codes_j - codes_p)
+    assert diff.max() <= 1, diff.max()
+    assert (diff > 0).mean() < 0.01  # boundary hits are rare
+    dj = cj.expand(cj.decode(wj, x.size).reshape(shape))
+    dp = cp.expand(cp.decode(wp, x.size).reshape(shape))
+    levels = (1 << (bits - 1)) - 1
+    np.testing.assert_allclose(np.asarray(dj), np.asarray(dp),
+                               atol=2.0 / levels)
+
+
+def test_lq_sync_pallas_backend_matches_jnp():
+    """Full distributed sync with quant_backend='pallas' reproduces the
+    jnp_ref wire to within one quantization level per element."""
+    grads = _grads(jax.random.PRNGKey(30))
+    for bits in (4, 8):
+        levels = (1 << (bits - 1)) - 1
+        _, out_j, _ = _sync("lq_sgd", grads, bits=bits, quant_backend="jnp_ref")
+        _, out_p, _ = _sync("lq_sgd", grads, bits=bits, quant_backend="pallas")
+        for lj, lp in zip(jax.tree.leaves(out_j), jax.tree.leaves(out_p)):
+            scale = float(np.abs(np.asarray(lj)).max()) or 1.0
+            np.testing.assert_allclose(np.asarray(lp), np.asarray(lj),
+                                       atol=2.0 * scale / levels)
+
+
+def test_unknown_backend_raises():
+    with pytest.raises(ValueError):
+        LogQuantCodec(bits=8, backend="cuda")
+
+
+# ------------------------------------------------- fused == unfused, all four
+@pytest.mark.parametrize("name", FOUR)
+def test_fused_unfused_bit_identical(name):
+    """fuse_collectives batches every phase into one flat gather; concat +
+    slice must be exact, so outputs and state match bit for bit."""
+    grads = _grads(jax.random.PRNGKey(20))
+    _, out_u, st_u = _sync(name, grads, steps=3)
+    _, out_f, st_f = _sync(name, grads, steps=3, fuse_collectives=True)
+    for lu, lf in zip(jax.tree.leaves(out_u), jax.tree.leaves(out_f)):
+        np.testing.assert_array_equal(np.asarray(lu), np.asarray(lf))
+    for lu, lf in zip(jax.tree.leaves(st_u), jax.tree.leaves(st_f)):
+        np.testing.assert_array_equal(np.asarray(lu), np.asarray(lf))
+
+
+@pytest.mark.parametrize("name", FOUR)
+def test_fused_unfused_bit_identical_b4(name):
+    """Same matrix at b=4 — the packed wire must not perturb parity."""
+    grads = _grads(jax.random.PRNGKey(21))
+    kw = {"bits": 4} if name in ("qsgd", "lq_sgd") else {}
+    _, out_u, _ = _sync(name, grads, **kw)
+    _, out_f, _ = _sync(name, grads, fuse_collectives=True, **kw)
+    for lu, lf in zip(jax.tree.leaves(out_u), jax.tree.leaves(out_f)):
+        np.testing.assert_array_equal(np.asarray(lu), np.asarray(lf))
+
+
+# ------------------------------------------------- collective counts
+@pytest.mark.parametrize("name", ["powersgd", "lq_sgd"])
+def test_fused_collective_count_is_2_plus_nraw(name):
+    """One collective per power-iteration phase + one per raw leaf."""
+    grads = _grads(jax.random.PRNGKey(22))
+    recs = []
+    comp, _, _ = _sync(name, grads, fuse_collectives=True, collect_recs=recs)
+    n_raw = sum(1 for pl in comp.plans if pl.route != "lowrank")
+    assert n_raw == 1  # 'b' is the only raw leaf in this fixture
+    assert recs[0].n_collectives == 2 + n_raw
+
+
+def test_unfused_collective_count(name="lq_sgd"):
+    """Unfused: one per compressed tensor per phase + one per raw leaf."""
+    grads = _grads(jax.random.PRNGKey(23))
+    recs = []
+    comp, _, _ = _sync(name, grads, collect_recs=recs)
+    n_comp = sum(1 for pl in comp.plans if pl.route == "lowrank")
+    n_raw = len(comp.plans) - n_comp
+    assert recs[0].n_collectives == 2 * n_comp + n_raw
+
+
+# ------------------------------------------------- packed-wire accounting
+@pytest.mark.parametrize("bits", [4, 8])
+def test_gathered_bytes_equal_accounting(bits):
+    """The bits CommRecord charges during sync come from the ACTUAL encoded
+    array sizes; static wire_bits_per_step must agree exactly. At b=4 this
+    only holds because the wire really is nibble-packed — unpacked int8
+    codes would double the factor payload."""
+    grads = _grads(jax.random.PRNGKey(24))
+    recs = []
+    comp, _, _ = _sync("lq_sgd", grads, bits=bits, collect_recs=recs)
+    assert recs[0].bits_sent == comp.wire_bits_per_step()
+
+
+@pytest.mark.parametrize("wire", ["allgather_codes", "psum_sim"])
+def test_topk_accounting_is_sparse_in_both_wire_modes(wire):
+    """Regression: psum_sim used to ignore the account_bits override and
+    charge TopK's dense fp32 simulation instead of the k*64 sparse payload."""
+    grads = _grads(jax.random.PRNGKey(31))
+    recs = []
+    comp, _, _ = _sync("topk", grads, wire=wire, collect_recs=recs,
+                       topk_ratio=0.01)
+    assert recs[0].bits_sent == comp.wire_bits_per_step()
+
+
+def test_b4_wire_is_half_of_b8():
+    grads = _grads(jax.random.PRNGKey(25))
+    ab = _abstract(grads)
+    c8 = make_compressor(CompressorConfig(name="lq_sgd", rank=2, bits=8), ab, STACKED)
+    c4 = make_compressor(CompressorConfig(name="lq_sgd", rank=2, bits=4), ab, STACKED)
+
+    def payload(comp, bits):
+        # strip the 32-bit-per-scale sideband, compare code payload only
+        scales = sum((pl.shape[0] if pl.stacked else 1) * 2 + 0
+                     for pl in comp.plans if pl.route == "lowrank")
+        raw_scales = sum(1 for pl in comp.plans if pl.route != "lowrank")
+        return comp.wire_bits_per_step() - 32 * (scales + raw_scales)
+
+    assert payload(c4, 4) * 2 == payload(c8, 8)
+
+
+def test_packed_wire_bits_formula():
+    assert packed_wire_bits(100, 4) == 50 * 8
+    assert packed_wire_bits(101, 4) == 51 * 8
+    assert packed_wire_bits(100, 8) == 100 * 8
+    assert packed_wire_bits(100, 12) == 100 * 16
+
+
+# ------------------------------------------------- QSGD randomness
+def test_qsgd_randomness_advances_between_syncs():
+    """Regression: sync used to return `state` unchanged, so fold_in(key,
+    step) re-drew the SAME stochastic rounding forever."""
+    grads = _grads(jax.random.PRNGKey(26))
+    cfg = CompressorConfig(name="qsgd", rank=2, bits=4)  # coarse -> visible
+    comp = make_compressor(cfg, _abstract(grads), STACKED)
+    state = broadcast_state(comp.init_state(jax.random.PRNGKey(7)), N)
+
+    def worker(g, st):
+        out, st2, _ = comp.sync(g, st, AxisComm(("data",)))
+        return out, st2
+
+    wf = jax.jit(jax.vmap(worker, axis_name="data"))
+    out1, state = wf(grads, state)
+    assert int(state["step"][0]) == 1
+    out2, state = wf(grads, state)
+    assert int(state["step"][0]) == 2
+    # identical input grads, different rounding draws -> different outputs
+    assert bool(jnp.any(out1["w"] != out2["w"]))
+
+
+def test_qsgd_unbiased_over_draws():
+    """Averaged over many independent syncs, QSGD's stochastic rounding is
+    unbiased: the mean reconstruction approaches the true mean gradient."""
+    grads = _grads(jax.random.PRNGKey(27))
+    cfg = CompressorConfig(name="qsgd", rank=2, bits=8)
+    comp = make_compressor(cfg, _abstract(grads), STACKED)
+    state = broadcast_state(comp.init_state(jax.random.PRNGKey(3)), N)
+
+    def worker(g, st):
+        out, st2, _ = comp.sync(g, st, AxisComm(("data",)))
+        return out, st2
+
+    wf = jax.jit(jax.vmap(worker, axis_name="data"))
+    acc = jnp.zeros_like(grads["w"][0])
+    T = 30
+    for _ in range(T):
+        out, state = wf(grads, state)
+        acc = acc + out["w"][0]
+    want = jnp.mean(grads["w"], 0)
+    rel = float(jnp.linalg.norm(acc / T - want) / jnp.linalg.norm(want))
+    assert rel < 0.02, rel
+
+
+# ------------------------------------------------- phase helper contracts
+def test_fused_all_gather_rejects_mixed_dtypes():
+    comm = AxisComm(("data",))
+
+    def worker(x):
+        return comm.fused_all_gather([x.astype(jnp.int8), x.astype(jnp.float32)])
+
+    with pytest.raises(ValueError):
+        jax.vmap(worker, axis_name="data")(jnp.ones((2, 4)))
+
+
+def test_codec_phase_singleton_matches_manual():
+    """codec_phase on a 1-list reproduces quantize -> gather -> mean-of-
+    codes -> expand done by hand."""
+    from repro.core.quantization import LogQuantConfig, log_expand, quantize
+    x = jax.random.normal(jax.random.PRNGKey(28), (N, 33))
+    codec = LogQuantCodec(bits=8, alpha=10.0)
+
+    def worker(xi):
+        rec = CommRecord()
+        return codec_phase([xi], [False], codec, AxisComm(("data",)), rec)[0]
+
+    got = jax.vmap(worker, axis_name="data")(x)
+    qcfg = LogQuantConfig(bits=8, alpha=10.0)
+    scale = jnp.max(jnp.abs(x))
+    codes = quantize(x / scale, qcfg)
+    want = log_expand(jnp.mean(codes.astype(jnp.float32), 0) / qcfg.levels, 10.0) * scale
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want), atol=1e-6)
+
+
+def test_float32_codec_is_identity_wire():
+    x = jax.random.normal(jax.random.PRNGKey(29), (N, 17))
+
+    def worker(xi):
+        rec = CommRecord()
+        out = codec_phase([xi], [False], Float32Codec(), AxisComm(("data",)), rec)[0]
+        return out
+
+    got = jax.vmap(worker, axis_name="data")(x)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(jnp.mean(x, 0)),
+                               atol=1e-6)
+
+
+def test_qsgd_codec_requires_key():
+    with pytest.raises(ValueError):
+        QSGDCodec(bits=8).codes(jnp.ones((4,)))

@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # clean env: seeded-sweep fallback, see the shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.configs.base import ModelConfig, attn, mamba
 from repro.models.model import (count_params, forward, init_caches,

@@ -19,6 +19,8 @@ import jax
 from repro.core import AxisComm, CompressorConfig, make_compressor
 from repro.models.resnet import init_resnet18
 
+BENCH_JSON = "BENCH_comm_cost.json"
+
 DATASETS = {
     # name: (train_size, n_classes)
     "CIFAR-10": (50_000, 10),
@@ -58,9 +60,9 @@ def comm_table(rank: int = 1, bits: int = 8, topk_ratio: float | None = None):
     return rows
 
 
-def run() -> list[tuple[str, float, str]]:
+def run(table: dict | None = None) -> list[tuple[str, float, str]]:
     out = []
-    table = comm_table()
+    table = comm_table() if table is None else table
     paper = {  # paper-reported MB/epoch (Tables I-III)
         "CIFAR-10": {"sgd": 3325, "powersgd": 14, "topk": 14, "lq_sgd": 3},
         "CIFAR-100": {"sgd": 3339, "powersgd": 14, "topk": 14, "lq_sgd": 3},
@@ -71,6 +73,20 @@ def run() -> list[tuple[str, float, str]]:
             out.append((f"comm_cost/{ds}/{m}",
                         mb, f"paper={paper[ds][m]}MB ours={mb:.1f}MB"))
     return out
+
+
+def bench(quick: bool = False) -> tuple[list[tuple[str, float, str]], dict]:
+    """Shared benchmarks.run contract: (csv rows, BENCH_comm_cost.json)."""
+    table = comm_table()
+    rows = run(table)
+    payload = {
+        "bench": "comm_cost",
+        "schema": 1,
+        "quick": quick,
+        "mb_per_epoch": table,
+        "rows": [{"name": n, "value": v, "derived": d} for n, v, d in rows],
+    }
+    return rows, payload
 
 
 def check() -> list[tuple[str, float, str]]:

@@ -18,6 +18,7 @@ from repro.models.common import KeyGen
 from repro.models.resnet import init_resnet18, resnet18_forward
 
 N_WORKERS = 4
+BENCH_JSON = "BENCH_convergence.json"
 
 
 def _init_cnn(key, n_classes=10):
@@ -95,26 +96,34 @@ def train_one(comp_cfg: CompressorConfig, steps: int = 60, lr: float = 0.05,
     return acc, losses, secs
 
 
-def run(steps: int = 60) -> list[tuple[str, float, str]]:
-    out = []
-    methods = {
-        "sgd": CompressorConfig(name="none"),
-        "powersgd_r1": CompressorConfig(name="powersgd", rank=1),
-        "topk": CompressorConfig(name="topk", topk_ratio=0.01),
-        "lq_sgd_r1": CompressorConfig(name="lq_sgd", rank=1, bits=8),
-        "lq_sgd_r2": CompressorConfig(name="lq_sgd", rank=2, bits=8),
-        "lq_sgd_r4": CompressorConfig(name="lq_sgd", rank=4, bits=8),
-        "lq_sgd_r1_meanfix": CompressorConfig(name="lq_sgd", rank=1, bits=8,
-                                              avg_mode="dequant_then_mean"),
-        "lq_sgd_r1_b4": CompressorConfig(name="lq_sgd", rank=1, bits=4),
-    }
-    for name, cc in methods.items():
+METHODS = {
+    "sgd": CompressorConfig(name="none"),
+    "powersgd_r1": CompressorConfig(name="powersgd", rank=1),
+    "topk": CompressorConfig(name="topk", topk_ratio=0.01),
+    "lq_sgd_r1": CompressorConfig(name="lq_sgd", rank=1, bits=8),
+    "lq_sgd_r2": CompressorConfig(name="lq_sgd", rank=2, bits=8),
+    "lq_sgd_r4": CompressorConfig(name="lq_sgd", rank=4, bits=8),
+    "lq_sgd_r1_meanfix": CompressorConfig(name="lq_sgd", rank=1, bits=8,
+                                          avg_mode="dequant_then_mean"),
+    "lq_sgd_r1_b4": CompressorConfig(name="lq_sgd", rank=1, bits=4),
+}
+
+
+def bench(quick: bool = False) -> tuple[list[tuple[str, float, str]], dict]:
+    """Shared benchmarks.run contract: (csv rows, BENCH_convergence.json)."""
+    steps = 20 if quick else 60
+    rows, results = [], []
+    for name, cc in METHODS.items():
         acc, losses, secs = train_one(cc, steps=steps)
-        out.append((f"convergence/{name}", secs * 1e6,
-                    f"acc={acc:.3f} loss0={losses[0]:.3f} lossT={losses[-1]:.3f}"))
-    return out
+        rows.append((f"convergence/{name}", secs * 1e6,
+                     f"acc={acc:.3f} loss0={losses[0]:.3f} lossT={losses[-1]:.3f}"))
+        results.append({"method": name, "acc": acc, "loss0": losses[0],
+                        "lossT": losses[-1], "us_per_step": secs * 1e6})
+    payload = {"bench": "convergence", "schema": 1, "quick": quick,
+               "steps": steps, "n_workers": N_WORKERS, "results": results}
+    return rows, payload
 
 
 if __name__ == "__main__":
-    for name, val, extra in run():
+    for name, val, extra in bench()[0]:
         print(f"{name},{val:.0f},{extra}")

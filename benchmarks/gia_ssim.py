@@ -1,21 +1,42 @@
-"""Paper Fig. 5: SSIM of gradient-inversion reconstructions vs compression.
+"""Paper Fig. 5 + steady-state extension: SSIM/PSNR of gradient-inversion
+reconstructions vs compression, at BOTH attack points.
 
 SGD (uncompressed) must leak the most (highest SSIM); compression-based
-methods leak less, with rank trending SSIM down. Small convnet + smooth
-target image keep this CPU-tractable; the ordering — not the absolute
-SSIM — is the paper's claim.
+methods leak less, with rank trending SSIM down. Beyond the paper, the
+trajectory harness (repro.core.privacy.harness) threads REAL compressor
+state through victim training, so every method is attacked both cold-start
+(step 0: zero error feedback, random warm Q — the only point the legacy
+benchmark measured) and steady-state (after warm-up, the quantity the
+paper's claim is actually about). Small convnet + smooth target image keep
+this CPU-tractable; the ordering — not the absolute SSIM — is the claim.
+
+``bench(quick)`` returns (csv_rows, json_payload); the payload is what
+``python -m benchmarks.run --only gia_ssim --json`` writes to
+``BENCH_privacy.json`` (schema documented in README "Trustworthiness").
 """
 from __future__ import annotations
-
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import CompressorConfig, make_compressor
-from repro.core.privacy import GIAConfig, invert_gradients, observed_gradient, ssim
+from repro.core import CompressorConfig
+from repro.core.privacy import GIAConfig, HarnessConfig, sweep_methods
 from repro.models.common import KeyGen
+
+BENCH_JSON = "BENCH_privacy.json"
+
+# methods x {rank, bits, topk_ratio} sweep; None = uncompressed SGD
+METHODS: dict[str, CompressorConfig | None] = {
+    "sgd": None,
+    "powersgd_r4": CompressorConfig(name="powersgd", rank=4),
+    "powersgd_r1": CompressorConfig(name="powersgd", rank=1),
+    "topk": CompressorConfig(name="topk", topk_ratio=0.01),
+    "qsgd_b8": CompressorConfig(name="qsgd", bits=8),
+    "lq_sgd_r4": CompressorConfig(name="lq_sgd", rank=4, bits=8),
+    "lq_sgd_r1": CompressorConfig(name="lq_sgd", rank=1, bits=8),
+    "lq_sgd_r1_b4": CompressorConfig(name="lq_sgd", rank=1, bits=4),
+}
 
 
 def _init_net(key):
@@ -45,38 +66,52 @@ def _target_image():
             * jnp.ones((1, 16, 16, 3)))
 
 
-def run(steps: int = 300) -> list[tuple[str, float, str]]:
+def harness_config(quick: bool = False) -> HarnessConfig:
+    # best-of-8 restarts: single-restart inversion is bimodal in its init
+    # (contrast-inverted basins score negative SSIM), and the max over a
+    # small N is a noisy order statistic that can swamp the method effect
+    return HarnessConfig(
+        train_steps=6 if quick else 10,
+        attack_steps=(0, 5) if quick else (0, 9),
+        n_attack_seeds=8,
+        victim_lr=0.02,
+        gia=GIAConfig(steps=240 if quick else 300, lr=0.05, tv_coef=5e-3))
+
+
+def bench(quick: bool = False) -> tuple[list[tuple[str, float, str]], dict]:
+    cfg = harness_config(quick)
     params = _init_net(jax.random.PRNGKey(0))
     img = _target_image()
     y = jnp.array([3])
-    g_raw = _grad_fn(params, img, y)
-    abstract = jax.eval_shape(lambda: g_raw)
-    methods = {
-        "sgd": None,
-        "powersgd_r4": CompressorConfig(name="powersgd", rank=4),
-        "powersgd_r1": CompressorConfig(name="powersgd", rank=1),
-        "topk": CompressorConfig(name="topk", topk_ratio=0.01),
-        "lq_sgd_r4": CompressorConfig(name="lq_sgd", rank=4, bits=8),
-        "lq_sgd_r1": CompressorConfig(name="lq_sgd", rank=1, bits=8),
+    steady = max(cfg.attack_steps)
+
+    rows, results = [], []
+    for p in sweep_methods(METHODS, _grad_fn, params, img, y, cfg):
+        rows.append((f"gia_ssim/{p.method}/{p.phase}", p.attack_seconds * 1e6,
+                     f"ssim={p.ssim:.4f} psnr={p.psnr:.2f} step={p.step} "
+                     f"threaded={p.state_threaded}"))
+        results.append({
+            "method": p.method, "step": p.step, "phase": p.phase,
+            "ssim": p.ssim, "psnr": p.psnr,
+            "attack_loss": p.attack_loss,
+            "attack_seconds": p.attack_seconds,
+            "state_threaded": p.state_threaded,
+            "seed_ssims": list(p.seed_ssims),
+        })
+    payload = {
+        "bench": "privacy",
+        "schema": 1,
+        "quick": quick,
+        "attack_steps": {"cold_start": 0, "steady_state": steady},
+        "train_steps": cfg.train_steps,
+        "n_attack_seeds": cfg.n_attack_seeds,
+        "gia_steps": cfg.gia.steps,
+        "victim_lr": cfg.victim_lr,
+        "results": results,
     }
-    out = []
-    gcfg = GIAConfig(steps=steps, lr=0.05, tv_coef=5e-3)
-    for name, cc in methods.items():
-        t0 = time.time()
-        if cc is None:
-            g_obs = g_raw
-        else:
-            comp = make_compressor(cc, abstract)
-            g_obs = observed_gradient(_grad_fn, params, img, y, comp,
-                                      comp.init_state(jax.random.PRNGKey(1)))
-        x_hat, atk_loss = invert_gradients(_grad_fn, params, g_obs, img.shape,
-                                           y, jax.random.PRNGKey(7), gcfg)
-        s = float(ssim(img, x_hat))
-        out.append((f"gia_ssim/{name}", (time.time() - t0) * 1e6,
-                    f"ssim={s:.4f} attack_loss={float(atk_loss):.4f}"))
-    return out
+    return rows, payload
 
 
 if __name__ == "__main__":
-    for name, val, extra in run():
+    for name, val, extra in bench()[0]:
         print(f"{name},{val:.0f},{extra}")

@@ -18,6 +18,9 @@ from repro.kernels import ops, ref
 from repro.kernels.log_quant import log_quantize_pallas, pack_nibbles_pallas
 
 
+BENCH_JSON = "BENCH_quant_kernel.json"
+
+
 def _time(fn, *args, iters=20):
     fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
         jax.block_until_ready(fn(*args))
@@ -74,6 +77,19 @@ def run() -> list[tuple[str, float, str]]:
     assert np.array_equal(np.asarray(pack_nibbles_pallas(codes4, interpret=True)),
                           np.asarray(pack_nibbles(codes4)))
     return out
+
+
+def bench(quick: bool = False) -> tuple[list[tuple[str, float, str]], dict]:
+    """Shared benchmarks.run contract: (csv rows, BENCH_quant_kernel.json)."""
+    rows = run()
+    payload = {
+        "bench": "quant_kernel",
+        "schema": 1,
+        "quick": quick,
+        "rows": [{"name": n, "us_per_call": us, "derived": d}
+                 for n, us, d in rows],
+    }
+    return rows, payload
 
 
 if __name__ == "__main__":

@@ -1,16 +1,28 @@
 """Benchmark driver — one section per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--json] [--only SEC]
 
 Prints ``name,us_per_call,derived`` CSV (scaffold contract):
   * comm_cost     -> paper Tables I-III 'Size' column (exact wire accounting)
   * convergence   -> paper Figs. 1-3 / accuracy+time columns (reduced scale)
-  * gia_ssim      -> paper Fig. 5 (SSIM under gradient inversion)
+  * gia_ssim      -> paper Fig. 5 (SSIM/PSNR under gradient inversion,
+                     cold-start AND steady-state attack points)
   * quant_kernel  -> §IV-C quantization-overhead claim + kernel parity
+
+Every section module implements the shared JSON contract:
+
+    BENCH_JSON: str                      # output filename, BENCH_*.json
+    bench(quick: bool) -> (rows, payload)
+
+``rows`` is the CSV row list; ``payload`` is a JSON-serializable dict with
+at least {"bench", "schema", "quick"}. With ``--json`` each payload is
+written to its ``BENCH_JSON`` (plus a UTC timestamp), so CI can upload the
+machine-readable perf/quality trajectory per PR.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -22,26 +34,36 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     choices=["comm_cost", "convergence", "gia_ssim",
                              "quant_kernel"])
+    ap.add_argument("--json", action="store_true",
+                    help="also write each section's BENCH_*.json")
     args = ap.parse_args()
 
     from benchmarks import comm_cost, convergence, gia_ssim, quant_kernel
 
     sections = {
-        "comm_cost": lambda: comm_cost.run(),
-        "quant_kernel": lambda: quant_kernel.run(),
-        "convergence": lambda: convergence.run(steps=20 if args.quick else 60),
-        "gia_ssim": lambda: gia_ssim.run(steps=120 if args.quick else 300),
+        "comm_cost": comm_cost,
+        "quant_kernel": quant_kernel,
+        "convergence": convergence,
+        "gia_ssim": gia_ssim,
     }
     if args.only:
         sections = {args.only: sections[args.only]}
 
     print("name,us_per_call,derived")
     ok = True
-    for sec, fn in sections.items():
+    for sec, mod in sections.items():
         t0 = time.time()
         try:
-            for name, us, derived in fn():
+            rows, payload = mod.bench(quick=args.quick)
+            for name, us, derived in rows:
                 print(f"{name},{us:.1f},{derived}", flush=True)
+            if args.json:
+                payload = dict(payload)
+                payload["generated_utc"] = time.strftime(
+                    "%Y-%m-%dT%H:%M:%SZ", time.gmtime())
+                with open(mod.BENCH_JSON, "w") as f:
+                    json.dump(payload, f, indent=2, sort_keys=True)
+                print(f"# wrote {mod.BENCH_JSON}", flush=True)
         except Exception as e:  # pragma: no cover
             ok = False
             print(f"{sec},nan,ERROR:{e!r}", flush=True)

@@ -1,6 +1,7 @@
 """Gradient-inversion demo (paper §V-C): reconstruct a training image from
-the shared gradient, with and without LQ-SGD compression; saves the images
-as .npy and prints SSIM.
+the transmitted gradient, with and without LQ-SGD compression, at BOTH a
+cold-start and a steady-state attack point (compressor state threaded
+through victim training); saves the images as .npy and prints SSIM/PSNR.
 
     PYTHONPATH=src python examples/gia_demo.py
 """
@@ -8,15 +9,14 @@ import os
 import sys
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."))
 
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.gia_ssim import _grad_fn, _init_net, _target_image
-from repro.core import CompressorConfig, make_compressor
-from repro.core.privacy import GIAConfig, invert_gradients, observed_gradient, ssim
+from benchmarks.gia_ssim import (_grad_fn, _init_net, _target_image,
+                                 harness_config)
+from repro.core import CompressorConfig
+from repro.core.privacy import sweep_methods
 
 
 def main():
@@ -24,27 +24,24 @@ def main():
     params = _init_net(jax.random.PRNGKey(0))
     img = _target_image()
     y = jnp.array([3])
-    gcfg = GIAConfig(steps=300, lr=0.05, tv_coef=5e-3)
-
-    g_raw = _grad_fn(params, img, y)
-    x_sgd, _ = invert_gradients(_grad_fn, params, g_raw, img.shape, y,
-                                jax.random.PRNGKey(7), gcfg)
-
-    comp = make_compressor(CompressorConfig(name="lq_sgd", rank=1, bits=8),
-                           jax.eval_shape(lambda: g_raw))
-    g_lq = observed_gradient(_grad_fn, params, img, y, comp,
-                             comp.init_state(jax.random.PRNGKey(1)))
-    x_lq, _ = invert_gradients(_grad_fn, params, g_lq, img.shape, y,
-                               jax.random.PRNGKey(7), gcfg)
+    cfg = harness_config(quick=True)  # same schedule the CI benchmark runs
+    methods = {"sgd": None,
+               "lq_sgd": CompressorConfig(name="lq_sgd", rank=1, bits=8)}
+    points = sweep_methods(methods, _grad_fn, params, img, y, cfg)
 
     np.save("experiments/gia/original.npy", np.asarray(img))
-    np.save("experiments/gia/reconstructed_sgd.npy", np.asarray(x_sgd))
-    np.save("experiments/gia/reconstructed_lq_sgd.npy", np.asarray(x_lq))
-    s_sgd, s_lq = float(ssim(img, x_sgd)), float(ssim(img, x_lq))
-    print(f"SSIM of reconstruction — raw SGD gradient:   {s_sgd:.4f}")
-    print(f"SSIM of reconstruction — LQ-SGD gradient:    {s_lq:.4f}")
-    print("lower = less leakage; compression protects" if s_lq < s_sgd
-          else "unexpected: compression did not reduce leakage")
+    print(f"{'method':<10} {'phase':<14} {'ssim':>8} {'psnr':>8}  threaded")
+    ssims = {}
+    for p in points:
+        np.save(f"experiments/gia/reconstructed_{p.method}_{p.phase}.npy",
+                np.asarray(p.x_hat))
+        print(f"{p.method:<10} {p.phase:<14} {p.ssim:8.4f} {p.psnr:8.2f}  "
+              f"{p.state_threaded}")
+        ssims[(p.method, p.phase)] = p.ssim
+    protected = ssims[("lq_sgd", "steady_state")] < ssims[("sgd", "steady_state")]
+    print("lower = less leakage; compression protects at steady state"
+          if protected else
+          "unexpected: compression did not reduce steady-state leakage")
     print("images saved under experiments/gia/*.npy")
 
 

@@ -332,8 +332,11 @@ def codec_phase(xs: Sequence[jax.Array], stacked_flags: Sequence[bool],
         outs = []
         for i, (x, safe, key, ns) in enumerate(zip(xn, safes, keys, n_scales)):
             c = codec.codes(x, key=key)
+            # charge the PACKED container (codec.wire_bits), not x.size *
+            # codec.bits: odd-length b<=4 tensors round up to a whole byte
+            # on the real wire, so accounting agrees with 'allgather_codes'
             payload = (account_bits[i] if account_bits is not None
-                       else x.size * codec.bits)
+                       else codec.wire_bits(x.size))
             rec.add(payload + codec.scale_bits(ns), 1)
             if avg_mode == "paper":
                 val = codec.expand(comm.pmean(c.astype(jnp.float32)))

@@ -148,6 +148,28 @@ class GradCompressor:
         out = [self._raw_sync(g, comm, rec) for g in leaves]
         return jax.tree_util.tree_unflatten(self.treedef, out), state, rec
 
+    def sync_once(self, grads: PyTree, state: PyTree,
+                  axis_name: str = "solo") -> tuple[PyTree, PyTree, CommRecord]:
+        """Single-worker ``sync``: wraps the named-axis collectives in a
+        size-1 ``vmap`` axis so callers (the GIA harness, demos, notebooks)
+        don't hand-roll the wrapper. The compression is still lossy — the
+        output is the reconstruction an eavesdropper observes on the wire.
+        Returns ``(synced, new_state, CommRecord)`` with batch dims stripped;
+        ``new_state`` MUST be threaded into the next call for error feedback
+        and warm-start Q to evolve as they do in training."""
+        recs: list[CommRecord] = []
+
+        def one(g, st):
+            out, st2, rec = self.sync(g, st, AxisComm((axis_name,)))
+            recs.append(rec)
+            return out, st2
+
+        g1 = jax.tree.map(lambda t: t[None], grads)
+        st1 = jax.tree.map(lambda t: t[None], state)
+        out, st2 = jax.vmap(one, axis_name=axis_name)(g1, st1)
+        strip = lambda tr: jax.tree.map(lambda t: t[0], tr)
+        return strip(out), strip(st2), recs[0]
+
     # ---- sharding of per-worker state over the tensor-parallel axis ------
     def state_pspecs(self, state: PyTree, param_pspecs: PyTree, dp_axes):
         """PartitionSpecs for ``state`` leaves (WITHOUT the leading DP dim —
@@ -199,9 +221,10 @@ class TopKCompressor(GradCompressor):
 
     def init_state(self, key: jax.Array) -> PyTree:
         errs = {}
+        edt = jnp.dtype(self.cfg.state_dtype)
         for i, pl in enumerate(self.plans):
             if pl.route == "lowrank":  # reuse routing: 'compressible'
-                errs[str(i)] = jnp.zeros(pl.shape, jnp.float32)
+                errs[str(i)] = jnp.zeros(pl.shape, edt)
         return {"err": errs}
 
     def _k(self, numel: int) -> int:
@@ -219,13 +242,14 @@ class TopKCompressor(GradCompressor):
                 out[i] = self._raw_sync(g, comm, rec)
                 continue
             e = state["err"][str(i)]
-            g32 = g.astype(jnp.float32) + e
+            g32 = g.astype(jnp.float32) + e.astype(jnp.float32)
             flat = g32.reshape(-1)
             k = self._k(flat.size)
             vals, idx = jax.lax.top_k(jnp.abs(flat), k)
             mask = jnp.zeros_like(flat).at[idx].set(1.0)
             kept = flat * mask
-            new_err[str(i)] = (flat - kept).reshape(pl.shape)
+            new_err[str(i)] = (flat - kept).reshape(pl.shape).astype(
+                jnp.dtype(self.cfg.state_dtype))
             comp.append((i, g, pl))
             kepts.append(kept.reshape(pl.shape))
             account.append(k * 64)  # (value, index) pairs on the wire

@@ -1,8 +1,15 @@
-"""Trustworthiness evaluation: gradient inversion + SSIM (paper §V-C)."""
+"""Trustworthiness evaluation: gradient inversion + SSIM/PSNR (paper §V-C),
+and the trajectory harness distinguishing cold-start from steady-state
+leakage (threaded compressor state)."""
 from repro.core.privacy.gia import (GIAConfig, cosine_distance,
-                                    invert_gradients, observed_gradient,
-                                    total_variation)
-from repro.core.privacy.ssim import ssim
+                                    invert_gradients,
+                                    invert_gradients_batched,
+                                    observed_gradient, total_variation)
+from repro.core.privacy.harness import (AttackPoint, HarnessConfig,
+                                        run_attack_harness, sweep_methods)
+from repro.core.privacy.ssim import psnr, ssim
 
 __all__ = ["GIAConfig", "cosine_distance", "invert_gradients",
-           "observed_gradient", "total_variation", "ssim"]
+           "invert_gradients_batched", "observed_gradient",
+           "total_variation", "ssim", "psnr", "AttackPoint", "HarnessConfig",
+           "run_attack_harness", "sweep_methods"]

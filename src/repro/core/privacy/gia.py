@@ -13,13 +13,14 @@ setting; label inference is orthogonal).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
 __all__ = ["GIAConfig", "total_variation", "cosine_distance", "invert_gradients",
-           "observed_gradient"]
+           "invert_gradients_batched", "observed_gradient"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,22 +50,25 @@ def cosine_distance(g1: Any, g2: Any) -> jax.Array:
 
 
 def observed_gradient(grad_fn: Callable, params: Any, x: jax.Array,
-                      y: jax.Array, compressor=None, comp_state=None):
-    """The gradient an eavesdropper sees: raw for SGD, or the compressor's
-    reconstruction (run with a single-worker axis via vmap)."""
+                      y: jax.Array, compressor=None, comp_state=None
+                      ) -> tuple[Any, Any]:
+    """The (gradient, next compressor state) an eavesdropper sees at ONE
+    training step: the raw gradient for SGD, or the compressor's lossy
+    reconstruction produced by syncing with the CURRENT threaded state.
+
+    Returns ``(g_obs, new_state)``. Callers MUST thread ``new_state`` into
+    the next step: re-initializing the state every step only ever measures
+    *cold-start* leakage (zero error feedback, random warm-start Q), while
+    the paper's Fig. 5 claim is about training-time traffic — after warm-up,
+    error feedback accumulates exactly the residual information compression
+    dropped and warm Q aligns with the gradient subspace (*steady-state*
+    leakage). :mod:`repro.core.privacy.harness` does the threading."""
     g = grad_fn(params, x, y)
     if compressor is None:
-        return g
-    from repro.core.comm import AxisComm
-
-    def one_worker(g_, st_):
-        out, _, _ = compressor.sync(g_, st_, AxisComm(("gia_axis",)))
-        return out
-
-    g1 = jax.tree.map(lambda t: t[None], g)
-    st1 = jax.tree.map(lambda t: t[None], comp_state)
-    out = jax.vmap(one_worker, axis_name="gia_axis")(g1, st1)
-    return jax.tree.map(lambda t: t[0], out)
+        return g, comp_state
+    out, new_state, _ = compressor.sync_once(g, comp_state,
+                                             axis_name="gia_axis")
+    return out, new_state
 
 
 def invert_gradients(grad_fn: Callable, params: Any, g_obs: Any,
@@ -98,3 +102,27 @@ def invert_gradients(grad_fn: Callable, params: Any, g_obs: Any,
     (x, _, _), losses = jax.lax.scan(step, (x, m, v),
                                      jnp.arange(cfg.steps, dtype=jnp.float32))
     return x, losses[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("grad_fn", "x_shape", "cfg"))
+def _batched_attack(grad_fn, params, g_obs, x_shape, y, keys, cfg):
+    run = lambda key: invert_gradients(grad_fn, params, g_obs, x_shape, y,
+                                       key, cfg)
+    return jax.vmap(run)(keys)
+
+
+def invert_gradients_batched(grad_fn: Callable, params: Any, g_obs: Any,
+                             x_shape: tuple[int, ...], y: jax.Array,
+                             keys: jax.Array, cfg: GIAConfig = GIAConfig()
+                             ) -> tuple[jax.Array, jax.Array]:
+    """Batched attack: ``vmap`` the scan-jitted Adam inner loop over a
+    stacked ``(S, ...)`` PRNG-key array (independent restarts; the harness
+    scores the best — see :mod:`repro.core.privacy.harness` on why that is
+    an oracle upper bound). Returns ``(x_hats, losses)`` with shapes
+    ``(S, *x_shape)`` and ``(S,)``.
+
+    ``grad_fn`` is a static jit argument: pass a stable (module-level)
+    function, not a per-call closure, so sweeping many (method, step)
+    cells of the same model reuses ONE compilation of the scan loop."""
+    return _batched_attack(grad_fn, params, g_obs, tuple(x_shape), y, keys,
+                           cfg)

@@ -1,14 +1,15 @@
-"""SSIM (structural similarity) in pure jnp — the paper's privacy metric.
+"""Reconstruction-quality metrics in pure jnp — the privacy leakage scores.
 
-Standard Wang et al. 2004 formulation: 11x11 Gaussian window, sigma 1.5,
-K1=0.01, K2=0.03, averaged over channels and batch. Inputs are dynamically
+SSIM: standard Wang et al. 2004 formulation: 11x11 Gaussian window, sigma
+1.5, K1=0.01, K2=0.03, averaged over channels and batch. PSNR: peak
+signal-to-noise over the target's dynamic range. Inputs are dynamically
 range-normalized (reconstructions are unconstrained)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["ssim"]
+__all__ = ["ssim", "psnr"]
 
 
 def _gaussian_kernel(size: int = 11, sigma: float = 1.5) -> jax.Array:
@@ -49,3 +50,14 @@ def ssim(a: jax.Array, b: jax.Array, *, window: int = 11,
     num = (2 * mu_ab + c1) * (2 * s_ab + c2)
     den = (mu_aa + mu_bb + c1) * (s_aa + s_bb + c2)
     return jnp.mean(num / den)
+
+
+def psnr(target: jax.Array, recon: jax.Array) -> jax.Array:
+    """Peak signal-to-noise ratio in dB, with the peak taken as the
+    TARGET's dynamic range (the reconstruction is unconstrained, so using
+    its range would reward wild over-shoots). Higher = more leakage."""
+    a = target.astype(jnp.float32)
+    b = recon.astype(jnp.float32)
+    peak = jnp.maximum(a.max() - a.min(), 1e-6)
+    mse = jnp.mean((a - b) ** 2)
+    return 10.0 * jnp.log10(peak * peak / jnp.maximum(mse, 1e-12))

@@ -30,7 +30,14 @@ class Trainer:
         self.cfg = cfg
         self.history: list[dict[str, float]] = []
 
-    def run(self, state: Any, start_step: int = 0) -> Any:
+    def run(self, state: Any, start_step: int | None = None) -> Any:
+        """``start_step=None`` resumes from ``state["step"]`` when present
+        (the counter a restored checkpoint carries: the number of completed
+        steps), so save -> restore -> run continues instead of repeating."""
+        if start_step is None:
+            start_step = (int(jax.device_get(state["step"]))
+                          if isinstance(state, dict) and "step" in state
+                          else 0)
         t0 = time.time()
         for step in range(start_step, self.cfg.steps):
             batch = self.batch_fn(step)
@@ -44,7 +51,11 @@ class Trainer:
                 msg = " ".join(f"{k}={v:.4f}" for k, v in m.items()
                                if k not in ("step", "wall_s"))
                 print(f"step {step:5d} | {msg} | t={m['wall_s']}s")
-            if self.cfg.ckpt_every and step and step % self.cfg.ckpt_every == 0:
+            # save on the interval AND at the final step — a run whose last
+            # step is off the interval grid must still leave a checkpoint
+            if self.cfg.ckpt_every and (
+                    step == self.cfg.steps - 1
+                    or (step and step % self.cfg.ckpt_every == 0)):
                 host_state = jax.tree.map(lambda x: jax.device_get(x), state)
                 ckpt_save(self.cfg.ckpt_path, host_state)
         return state

@@ -215,6 +215,32 @@ def test_topk_accounting_is_sparse_in_both_wire_modes(wire):
     assert recs[0].bits_sent == comp.wire_bits_per_step()
 
 
+@pytest.mark.parametrize("bits", [4, 8])
+def test_psum_sim_accounting_matches_allgather(bits):
+    """Regression: psum_sim used to charge x.size * codec.bits while
+    allgather_codes charges the packed container — at b=4 an odd-length
+    factor rounds up to a whole byte, so the two wire modes disagreed.
+    Both must equal the static wire_bits_per_step accounting. Rank-1
+    factors of a (33, 35) tensor have odd numel, exercising the rounding."""
+    grads = {"w": jax.random.normal(jax.random.PRNGKey(32), (N, 33, 35))}
+    bits_by_mode = {}
+    for wire in ("allgather_codes", "psum_sim"):
+        cfg = CompressorConfig(name="lq_sgd", rank=1, bits=bits, wire=wire)
+        comp = make_compressor(cfg, _abstract(grads), {"w": False})
+        state = broadcast_state(comp.init_state(jax.random.PRNGKey(42)), N)
+        recs = []
+
+        def worker(g, st):
+            out, st2, rec = comp.sync(g, st, AxisComm(("data",)))
+            recs.append(rec)
+            return out, st2
+
+        jax.vmap(worker, axis_name="data")(grads, state)
+        bits_by_mode[wire] = recs[0].bits_sent
+        assert recs[0].bits_sent == comp.wire_bits_per_step(), wire
+    assert bits_by_mode["psum_sim"] == bits_by_mode["allgather_codes"]
+
+
 def test_b4_wire_is_half_of_b8():
     grads = _grads(jax.random.PRNGKey(25))
     ab = _abstract(grads)

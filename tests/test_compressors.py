@@ -210,6 +210,30 @@ def test_topk_keeps_largest():
     assert kept == topk
 
 
+@pytest.mark.parametrize("name", ["topk", "powersgd", "lq_sgd"])
+def test_error_feedback_honors_state_dtype(name):
+    """Regression: TopK ignored cfg.state_dtype (error feedback always
+    stored fp32) while PowerSGD/LQ-SGD honored it — both init_state and the
+    state returned by sync must use the configured dtype."""
+    grads = _grads(jax.random.PRNGKey(14))
+    cfg = CompressorConfig(name=name, rank=2, topk_ratio=0.1,
+                           state_dtype="bfloat16")
+    comp = make_compressor(cfg, _abstract(grads), STACKED)
+    st = comp.init_state(jax.random.PRNGKey(0))
+    assert st["err"], "fixture must produce at least one compressed leaf"
+    for leaf in jax.tree.leaves(st["err"]):
+        assert leaf.dtype == jnp.bfloat16
+
+    def worker(g, s):
+        out, s2, _ = comp.sync(g, s, AxisComm(("data",)))
+        return out, s2
+
+    _, st2 = jax.vmap(worker, axis_name="data")(
+        grads, broadcast_state(st, N))
+    for leaf in jax.tree.leaves(st2["err"]):
+        assert leaf.dtype == jnp.bfloat16
+
+
 def test_orthonormalize():
     p = jax.random.normal(jax.random.PRNGKey(11), (50, 4))
     q = orthonormalize(p)

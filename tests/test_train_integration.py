@@ -12,11 +12,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.checkpoint.io import restore as ckpt_restore
 from repro.configs.base import ModelConfig, attn
 from repro.data.synthetic import LMDataConfig, lm_batch
 from repro.models.model import init_params
 from repro.train.loss import lm_loss
 from repro.train.optimizer import adam, sgd
+from repro.train.trainer import Trainer, TrainerConfig
 
 
 def _tiny_cfg():
@@ -58,6 +60,48 @@ def test_adam_converges_quadratic():
         g = {"x": 2 * p["x"]}
         p, st = opt.update(g, st, p)
     assert abs(float(p["x"])) < 0.05
+
+
+def _counting_trainer(tmp_path, steps):
+    """Toy state machine: w accumulates the batch (always 1.0), step counts
+    completed steps — so w == step == number of step_fn invocations."""
+    def step_fn(state, batch):
+        new = {"w": state["w"] + batch, "step": state["step"] + 1}
+        return new, {"loss": jnp.float32(0.0)}
+
+    cfg = TrainerConfig(steps=steps, log_every=1000, ckpt_every=3,
+                        ckpt_path=str(tmp_path / "state.ckpt"))
+    return Trainer(step_fn, lambda i: jnp.float32(1.0), cfg), cfg
+
+
+def test_trainer_saves_final_step(tmp_path):
+    """Regression: the final step was never saved when (steps-1) was off
+    the ckpt_every grid — an 8-step run with ckpt_every=3 (final loop
+    index 7, off-grid) left its newest checkpoint at loop index 6,
+    losing the last update."""
+    trainer, cfg = _counting_trainer(tmp_path, steps=8)
+    state = trainer.run({"w": jnp.float32(0.0), "step": jnp.zeros((), jnp.int32)})
+    assert int(state["step"]) == 8
+    restored = ckpt_restore(cfg.ckpt_path, jax.eval_shape(lambda: state))
+    assert int(restored["step"]) == 8          # not 7 (the last grid save)
+    assert float(restored["w"]) == 8.0
+
+
+def test_trainer_resume_round_trip(tmp_path):
+    """save -> restore -> continue: run() derives start_step from the
+    restored state["step"], so no step is repeated or skipped."""
+    trainer, cfg = _counting_trainer(tmp_path, steps=5)
+    state0 = {"w": jnp.float32(0.0), "step": jnp.zeros((), jnp.int32)}
+    state = trainer.run(state0)
+    restored = ckpt_restore(cfg.ckpt_path, jax.eval_shape(lambda: state))
+    trainer2, _ = _counting_trainer(tmp_path, steps=9)
+    final = trainer2.run(restored)             # start_step derived: 5
+    assert int(final["step"]) == 9
+    assert float(final["w"]) == 9.0            # 4 more steps, none repeated
+    # explicit start_step still wins over the derived one
+    trainer3, _ = _counting_trainer(tmp_path, steps=9)
+    again = trainer3.run(restored, start_step=8)
+    assert int(again["step"]) == 6 and float(again["w"]) == 6.0
 
 
 _SUBPROC = textwrap.dedent("""

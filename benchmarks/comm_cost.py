@@ -45,11 +45,22 @@ def comm_table(rank: int = 1, bits: int = 8, topk_ratio: float | None = None):
             "powersgd": CompressorConfig(name="powersgd", rank=rank),
             "lq_sgd": CompressorConfig(name="lq_sgd", rank=rank, bits=bits),
         }
-        # TopK at a ratio matching PowerSGD's compression (paper footnote)
+        # TopK at a ratio matching PowerSGD's compression (paper footnote),
+        # under the HONEST sparse payload: a kept entry costs a 32-bit value
+        # + ceil(log2(numel))-bit index, not a flat 64 bits — so the ratio
+        # solves sum_l k_l*(32+idx_l) = PowerSGD's compressed-leaf wire
         ps = make_compressor(methods["powersgd"], abstract)
-        none = make_compressor(methods["sgd"], abstract)
-        ratio = (topk_ratio if topk_ratio is not None
-                 else ps.wire_bits_per_step() / none.wire_bits_per_step() / 2)
+        if topk_ratio is not None:
+            ratio = topk_ratio
+        else:
+            from repro.core.compressors import TopKHandler, _numel
+            comp_plans = [pl for pl in ps.plans if pl.route == "lowrank"]
+            ps_comp_bits = sum(ps.handler.leaf_wire_bits(pl)
+                               for pl in comp_plans)
+            denom = sum(_numel(pl.shape)
+                        * (32 + TopKHandler.index_bits(_numel(pl.shape)))
+                        for pl in comp_plans)
+            ratio = ps_comp_bits / denom
         methods["topk"] = CompressorConfig(name="topk", topk_ratio=ratio)
         spe = steps_per_epoch(n)
         row = {}

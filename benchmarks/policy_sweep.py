@@ -1,0 +1,86 @@
+"""Per-leaf policy sweep: uniform vs mixed vs auto compression policies.
+
+The paper's Algorithm 1 ships every tensor with one global (rank, b_p, b_q)
+setting. This section quantifies what per-leaf policies buy on the same
+mini-CNN the convergence figures use, with exact N-worker collective
+semantics: for each policy row we record the REAL static wire accounting
+(``wire_bits_per_step`` — the same numbers the distributed step charges)
+and a convergence proxy (final train accuracy + last loss) from
+``benchmarks.convergence.train_one``.
+
+Rows:
+  * ``uniform_*``   — the paper's one-size-fits-all config (LQ-SGD r1/r2 b8);
+  * ``mixed``       — a hand-written spec (conv factors at 4 bits, the small
+                      head/bias leaves log-quantized at 8 bits);
+  * ``auto``        — the cost-model planner (``policy='auto'``,
+                      repro.core.policy) under the default error budget;
+  * ``auto_tight``  — the planner at a 4x tighter budget (shows the
+                      budget->fidelity dial; ships more bits than ``auto``).
+
+Merged into BENCH_comm_cost.json under the ``policy_sweep`` key (shared
+``benchmarks.run`` contract + BENCH_KEY), so the comm-cost artifact carries
+the policy trajectory next to the paper tables.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import CompressorConfig, make_compressor
+
+BENCH_JSON = "BENCH_comm_cost.json"
+BENCH_KEY = "policy_sweep"
+
+# conv stacks -> 4-bit low-rank factors; everything else (head, biases,
+# first conv) -> 8-bit log-quantized raw path. 'c' matches ['c1'..'c3'].
+MIXED_SPEC = "c2=lq_sgd:rank=1:bits=4,c3=lq_sgd:rank=1:bits=4,*=lq_sgd:bits=8"
+
+POLICIES = {
+    "uniform_lq_r1_b8": CompressorConfig(name="lq_sgd", rank=1, bits=8),
+    "uniform_lq_r2_b8": CompressorConfig(name="lq_sgd", rank=2, bits=8),
+    "mixed": CompressorConfig(name="lq_sgd", rank=1, bits=8,
+                              policy=MIXED_SPEC),
+    "auto": CompressorConfig(name="lq_sgd", policy="auto", error_budget=0.25),
+    "auto_tight": CompressorConfig(name="lq_sgd", policy="auto",
+                                   error_budget=0.075),
+}
+
+
+def _wire_bits(cc: CompressorConfig) -> tuple[int, dict]:
+    from benchmarks.convergence import _init_cnn
+    abstract = jax.eval_shape(lambda: _init_cnn(jax.random.PRNGKey(0)))
+    comp = make_compressor(cc, abstract)
+    by_method = (comp.wire_bits_by_method()
+                 if hasattr(comp, "wire_bits_by_method")
+                 else {cc.name: comp.wire_bits_per_step()})
+    return comp.wire_bits_per_step(), by_method
+
+
+def bench(quick: bool = False) -> tuple[list[tuple[str, float, str]], dict]:
+    """Shared benchmarks.run contract: (csv rows, payload)."""
+    from benchmarks.convergence import train_one
+    steps = 20 if quick else 60
+    rows, results = [], []
+    for name, cc in POLICIES.items():
+        wb, by_method = _wire_bits(cc)
+        acc, losses, secs = train_one(cc, steps=steps)
+        rows.append((f"policy_sweep/{name}", secs * 1e6,
+                     f"wire={wb/8e3:.2f}KB/step acc={acc:.3f} "
+                     f"lossT={losses[-1]:.3f}"))
+        results.append({"policy": name, "wire_bits_per_step": wb,
+                        "wire_bits_by_method": by_method, "acc": acc,
+                        "loss0": losses[0], "lossT": losses[-1],
+                        "us_per_step": secs * 1e6})
+    uniform_best = min(r["wire_bits_per_step"] for r in results
+                       if r["policy"].startswith("uniform_"))
+    payload = {
+        "bench": "policy_sweep", "schema": 1, "quick": quick,
+        "steps": steps, "model": "mini_cnn", "mixed_spec": MIXED_SPEC,
+        "uniform_best_wire_bits": uniform_best,
+        "results": results,
+    }
+    return rows, payload
+
+
+if __name__ == "__main__":
+    for name, val, extra in bench(quick=True)[0]:
+        print(f"{name},{val:.0f},{extra}")

@@ -4,6 +4,8 @@
 
 Prints ``name,us_per_call,derived`` CSV (scaffold contract):
   * comm_cost     -> paper Tables I-III 'Size' column (exact wire accounting)
+  * policy_sweep  -> per-leaf policies: uniform vs mixed vs auto wire +
+                     convergence proxy (merged into BENCH_comm_cost.json)
   * convergence   -> paper Figs. 1-3 / accuracy+time columns (reduced scale)
   * gia_ssim      -> paper Fig. 5 (SSIM/PSNR under gradient inversion,
                      cold-start AND steady-state attack points)
@@ -17,11 +19,14 @@ Every section module implements the shared JSON contract:
 ``rows`` is the CSV row list; ``payload`` is a JSON-serializable dict with
 at least {"bench", "schema", "quick"}. With ``--json`` each payload is
 written to its ``BENCH_JSON`` (plus a UTC timestamp), so CI can upload the
-machine-readable perf/quality trajectory per PR.
+machine-readable perf/quality trajectory per PR. A section may also set
+``BENCH_KEY`` to merge its payload INTO another section's file under that
+key (policy_sweep rides in BENCH_comm_cost.json) instead of owning a file.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import json
 import sys
 import time
@@ -32,20 +37,31 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="fewer steps (CI-speed)")
     ap.add_argument("--only", default=None,
-                    choices=["comm_cost", "convergence", "gia_ssim",
-                             "quant_kernel"])
+                    choices=["comm_cost", "policy_sweep", "convergence",
+                             "gia_ssim", "quant_kernel"])
     ap.add_argument("--json", action="store_true",
                     help="also write each section's BENCH_*.json")
     args = ap.parse_args()
 
-    from benchmarks import comm_cost, convergence, gia_ssim, quant_kernel
+    from benchmarks import (comm_cost, convergence, gia_ssim, policy_sweep,
+                            quant_kernel)
 
+    # policy_sweep AFTER comm_cost: it merges into BENCH_comm_cost.json
     sections = {
         "comm_cost": comm_cost,
+        "policy_sweep": policy_sweep,
         "quant_kernel": quant_kernel,
         "convergence": convergence,
         "gia_ssim": gia_ssim,
     }
+    # BENCH_KEYs other sections merge into each file — the file's owner
+    # must carry these over on rewrite, or regenerating it alone (--only)
+    # would silently drop a sibling's merged payload
+    shared_keys: dict[str, set] = {}
+    for m in sections.values():
+        k = getattr(m, "BENCH_KEY", None)
+        if k:
+            shared_keys.setdefault(m.BENCH_JSON, set()).add(k)
     if args.only:
         sections = {args.only: sections[args.only]}
 
@@ -61,6 +77,18 @@ def main() -> None:
                 payload = dict(payload)
                 payload["generated_utc"] = time.strftime(
                     "%Y-%m-%dT%H:%M:%SZ", time.gmtime())
+                key = getattr(mod, "BENCH_KEY", None)
+                base = {}
+                if os.path.exists(mod.BENCH_JSON):
+                    with open(mod.BENCH_JSON) as f:
+                        base = json.load(f)
+                if key:  # merge into the owning section's file
+                    base[key] = payload
+                    payload = base
+                else:  # owner rewrite: keep siblings' merged sections
+                    for k in shared_keys.get(mod.BENCH_JSON, ()):
+                        if k in base:
+                            payload[k] = base[k]
                 with open(mod.BENCH_JSON, "w") as f:
                     json.dump(payload, f, indent=2, sort_keys=True)
                 print(f"# wrote {mod.BENCH_JSON}", flush=True)

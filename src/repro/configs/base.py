@@ -81,6 +81,12 @@ class ModelConfig:
     # ---- multimodal (stub frontends) ----
     n_codebooks: int = 0              # musicgen: parallel EnCodec codebooks
     cond_len: int = 0                 # conditioning prefix length (stub)
+    # ---- gradient-compression policy hint ----
+    # Per-leaf compression policy the launchers use when --policy is not
+    # given: None (uniform global CompressorConfig), "auto" (the cost-model
+    # planner in repro.core.policy), or a policy spec string
+    # 'pattern=method:knob=v:...' (README "Per-leaf policies & schedules").
+    compression_policy: str | None = None
     # ---- extras ----
     mtp: bool = False                 # DeepSeek multi-token-prediction head
     tie_embeddings: bool = False

@@ -8,24 +8,37 @@ from repro.core.codec import (
     make_wire_codec,
 )
 from repro.core.comm import AxisComm, CommRecord
+from repro.core.composite import CompositeCompressor, PolicySchedule
 from repro.core.compressors import (
     CompressorConfig,
     GradCompressor,
+    LeafPlan,
+    LeafPolicy,
     NoCompression,
     QSGDCompressor,
     TopKCompressor,
     make_compressor,
 )
 from repro.core.lq_sgd import LQSGDCompressor
+from repro.core.policy import (
+    parse_policy_spec,
+    plan_auto,
+    resolve_policies,
+    uniform_policy,
+)
 from repro.core.powersgd import PowerSGDCompressor
 from repro.core.quantization import LogQuantConfig
 
 __all__ = [
     "AxisComm",
     "CommRecord",
+    "CompositeCompressor",
     "CompressorConfig",
     "GradCompressor",
+    "LeafPlan",
+    "LeafPolicy",
     "NoCompression",
+    "PolicySchedule",
     "QSGDCompressor",
     "TopKCompressor",
     "LQSGDCompressor",
@@ -38,4 +51,8 @@ __all__ = [
     "codec_phase",
     "make_wire_codec",
     "make_compressor",
+    "parse_policy_spec",
+    "plan_auto",
+    "resolve_policies",
+    "uniform_policy",
 ]

@@ -1,0 +1,255 @@
+"""Per-leaf compression policies: the composite compressor + schedules.
+
+The paper's Algorithm 1 applies one ``(rank, b_p, b_q)`` setting to every
+gradient tensor. :class:`CompositeCompressor` lifts that restriction: each
+leaf carries its own :class:`~repro.core.compressors.LeafPolicy` (method +
+knobs), leaves are grouped by method, and each group runs the SAME
+leaf-group handler the dedicated compressor classes drive — one fused
+``codec_phase`` collective set per method (per distinct wire dtype) per
+step. A composite with a uniform policy is therefore bit-for-bit identical
+to the dedicated compressor (regression-tested for all four methods, fused
+and unfused).
+
+State: the per-method namespaces (error feedback ``err``, warm-start ``q``,
+QSGD's PRNG ``key``) merge into ONE threaded state pytree keyed by the
+global flattened-leaf index, plus the composite's own ``step`` counter.
+``state_pspecs`` (structured ``{namespace: {leaf_index: spec}}``) shards
+the merged namespaces exactly like the dedicated ones.
+
+Schedules (:class:`PolicySchedule`):
+
+* ``warmup_steps W`` — **in-graph**: while ``state['step'] < W`` every
+  lossy leaf's synced output is replaced by the exact fp32 mean and its
+  error feedback is held at zero, selected on the state's own step counter.
+  One traced graph, no recompilation — jit/shard_map-clean. Because the
+  selection is a ``jnp.where`` on a traced predicate, a graph built with
+  ``W > 0`` runs BOTH the compressed collectives and the fp32 shadow
+  all-reduce on every step; the shadow is not charged to the CommRecord
+  (accounting reflects the compressed wire) and is reported statically by
+  :meth:`warmup_extra_bits`. ``boundaries()`` therefore includes ``W`` so
+  the launcher rebuilds once warm-up ends (``at_step`` drops the shadow),
+  keeping the steady-state graph free of it.
+
+* ``decay`` — piecewise-constant ``(start_step, rank_cap, bits_cap)`` caps.
+  Changing a wire dtype or factor rank changes the compiled graph, so decay
+  is applied by REBUILDING at phase boundaries: ``at_step(t)`` returns the
+  composite for the phase containing ``t`` and ``adapt_state`` carries the
+  threaded state across (error feedback kept, warm Q column-truncated).
+  ``launch/train.py`` drives the per-phase loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.comm import AxisComm, CommRecord
+from repro.core.compressors import (CompressorConfig, GradCompressor,
+                                    LeafGroupHandler, LeafPolicy,
+                                    QSGDHandler, TopKHandler, _numel,
+                                    build_plans)
+
+__all__ = ["CompositeCompressor", "PolicySchedule", "handler_for"]
+
+PyTree = Any
+
+
+def handler_for(method: str, cfg: CompressorConfig) -> LeafGroupHandler:
+    """Handler registry: one leaf-group handler instance per policy method."""
+    from repro.core.powersgd import PowerSGDHandler
+    from repro.core.lq_sgd import LQSGDHandler
+    registry = {
+        "raw": LeafGroupHandler,
+        "topk": TopKHandler,
+        "qsgd": QSGDHandler,
+        "powersgd": PowerSGDHandler,
+        "lq_sgd": LQSGDHandler,
+    }
+    if method not in registry:
+        raise ValueError(f"unknown policy method {method!r}; "
+                         f"options: {sorted(registry)}")
+    return registry[method](cfg)
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicySchedule:
+    """Step-indexed policy switching (see module docstring)."""
+
+    warmup_steps: int = 0
+    decay: tuple[tuple[int, int | None, int | None], ...] = ()
+
+    def boundaries(self) -> list[int]:
+        """Steps at which the launcher should rebuild the traced graph:
+        every decay start, plus the end of warm-up — the warm-up selection
+        is correct in one graph at ANY step (in-graph, tested), but the
+        warm graph carries both the compressed collectives and the fp32
+        shadow all-reduce, so rebuilding at W drops the shadow from the
+        steady state."""
+        b = {int(s) for s, _, _ in self.decay}
+        if self.warmup_steps > 0:
+            b.add(int(self.warmup_steps))
+        return sorted(b)
+
+    def policy_at(self, step: int, pol: LeafPolicy) -> LeafPolicy:
+        """The policy in force at ``step`` after applying every decay cap
+        whose start has passed. Caps clamp, never raise."""
+        rank, bits, bits_q = pol.rank, pol.bits, pol.bits_q
+        for s, rank_cap, bits_cap in sorted(self.decay):
+            if step < s:
+                break
+            if rank_cap is not None:
+                rank = min(rank, int(rank_cap))
+            if bits_cap is not None:
+                bits = min(bits, int(bits_cap))
+                if bits_q is not None:
+                    bits_q = min(bits_q, int(bits_cap))
+        if (rank, bits, bits_q) == (pol.rank, pol.bits, pol.bits_q):
+            return pol
+        return dataclasses.replace(pol, rank=rank, bits=bits, bits_q=bits_q)
+
+
+class CompositeCompressor(GradCompressor):
+    """Per-leaf policy compressor: groups leaves by method, drives one
+    leaf-group handler per group, merges state namespaces (module docstring
+    has the full story)."""
+
+    # auto-planner report rows when make_compressor planned this composite
+    plan_report: list[dict] | None = None
+
+    def __init__(self, cfg: CompressorConfig, abstract_grads: PyTree,
+                 stacked: PyTree | None = None, *,
+                 policies: Sequence[LeafPolicy] | Callable[[str, Any], LeafPolicy],
+                 schedule: PolicySchedule | None = None):
+        self.cfg = cfg
+        self.treedef = jax.tree_util.tree_structure(abstract_grads)
+        self._abstract = abstract_grads
+        self._stacked = stacked
+        if callable(policies):
+            flat = jax.tree_util.tree_flatten_with_path(abstract_grads)[0]
+            policies = [policies(jax.tree_util.keystr(kp), leaf)
+                        for kp, leaf in flat]
+        self.policies = list(policies)
+        self.plans = build_plans(abstract_grads, cfg.rank,
+                                 cfg.min_compress_numel, stacked,
+                                 policies=self.policies)
+        self.schedule = schedule or PolicySchedule()
+        # leaf groups in flatten order; handlers in first-occurrence order
+        self.groups: dict[str, list[int]] = {}
+        for i, pl in enumerate(self.plans):
+            self.groups.setdefault(pl.policy.method, []).append(i)
+        self.handlers = {m: handler_for(m, cfg) for m in self.groups}
+
+    # ---- state -----------------------------------------------------------
+    def init_state(self, key: jax.Array) -> PyTree:
+        state: dict[str, Any] = {"step": jnp.zeros((), jnp.int32)}
+        for h in self.handlers.values():
+            for ns in h.namespaces:
+                state.setdefault(ns, {})
+            if h.needs_prng:
+                state.setdefault("key", key)
+        for m, idxs in self.groups.items():
+            h = self.handlers[m]
+            for i in idxs:
+                for ns, v in h.init_leaf_state(key, i, self.plans[i]).items():
+                    state[ns][str(i)] = v
+        return state
+
+    def _param_shaped_namespaces(self) -> tuple[str, ...]:
+        out: list[str] = []
+        for h in self.handlers.values():
+            for ns in h.param_shaped:
+                if ns not in out:
+                    out.append(ns)
+        return tuple(out)
+
+    # ---- the sync op -----------------------------------------------------
+    def _lossy(self, pl) -> bool:
+        """Does this leaf's sync lose information vs the exact fp32 mean?
+        (lq_sgd quantizes even its raw-route leaves.)"""
+        if pl.policy.method == "raw":
+            return False
+        return pl.route == "lowrank" or pl.policy.method == "lq_sgd"
+
+    def sync(self, grads: PyTree, state: PyTree, comm: AxisComm
+             ) -> tuple[PyTree, PyTree, CommRecord]:
+        rec = CommRecord()
+        leaves = jax.tree_util.tree_flatten(grads)[0]
+        outs: dict[int, jax.Array] = {}
+        updates: dict[str, dict] = {}
+        for m, idxs in self.groups.items():
+            items = [(i, leaves[i], self.plans[i]) for i in idxs]
+            o, upd = self.handlers[m].sync_group(items, state, comm, rec)
+            outs.update(o)
+            for ns, sub in upd.items():
+                updates.setdefault(ns, {}).update(sub)
+        # ---- schedule: in-graph full-precision warm-up -------------------
+        if self.schedule.warmup_steps > 0:
+            warm = state["step"] < self.schedule.warmup_steps
+            for i, pl in enumerate(self.plans):
+                if not self._lossy(pl):
+                    continue
+                g = leaves[i]
+                exact = comm.pmean(g.astype(jnp.float32)).astype(g.dtype)
+                outs[i] = jnp.where(warm, exact, outs[i])
+            # hold error feedback at zero while warm: the compressed path's
+            # residual was never applied, so recycling it would inject a
+            # phantom correction at step W
+            for k, v in updates.get("err", {}).items():
+                updates["err"][k] = jnp.where(warm, jnp.zeros_like(v), v)
+        new_state = dict(self._merge_state(state, updates))
+        new_state["step"] = state["step"] + 1
+        out = [outs[i] for i in range(len(leaves))]
+        return (jax.tree_util.tree_unflatten(self.treedef, out),
+                new_state, rec)
+
+    # ---- static accounting -----------------------------------------------
+    def wire_bits_per_step(self) -> int:
+        return sum(self.handlers[pl.policy.method].leaf_wire_bits(pl)
+                   for pl in self.plans)
+
+    def warmup_extra_bits(self) -> int:
+        """fp32 shadow all-reduce traffic added per step by a graph traced
+        with W > 0 (the where-selection keeps it in the graph at EVERY
+        step, not just while warm — rebuild via ``at_step(W)`` to drop it;
+        the train launcher does). Zero when W == 0."""
+        if self.schedule.warmup_steps <= 0:
+            return 0
+        return sum(_numel(pl.shape) * 32 for pl in self.plans
+                   if self._lossy(pl))
+
+    def wire_bits_by_method(self) -> dict[str, int]:
+        """Static wire accounting split per policy method (planner tables)."""
+        out: dict[str, int] = {}
+        for pl in self.plans:
+            m = pl.policy.method
+            out[m] = out.get(m, 0) + self.handlers[m].leaf_wire_bits(pl)
+        return out
+
+    # ---- decay phases ----------------------------------------------------
+    def at_step(self, step: int) -> "CompositeCompressor":
+        """The composite in force for the schedule phase containing
+        ``step``: decay caps applied, and the warm-up machinery (shadow
+        fp32 all-reduce + output selection) dropped once ``step >= W``.
+        Returns ``self`` when nothing changes (no rebuild)."""
+        pols = [self.schedule.policy_at(step, p) for p in self.policies]
+        sched = self.schedule
+        if sched.warmup_steps and step >= sched.warmup_steps:
+            sched = dataclasses.replace(sched, warmup_steps=0)
+        if pols == self.policies and sched == self.schedule:
+            return self
+        return CompositeCompressor(self.cfg, self._abstract, self._stacked,
+                                   policies=pols, schedule=sched)
+
+    def adapt_state(self, state: PyTree) -> PyTree:
+        """Carry threaded compressor state across a decay phase boundary:
+        error feedback and counters are kept as-is (shapes don't change);
+        warm-start Q is column-truncated to the new effective rank. Works
+        with or without the leading per-DP-worker dim (slices the last
+        axis only)."""
+        new = dict(state)
+        if "q" in state:
+            new["q"] = {k: v[..., :self.plans[int(k)].eff_rank]
+                        for k, v in state["q"].items()}
+        return new

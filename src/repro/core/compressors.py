@@ -12,10 +12,19 @@ shard_maps:
 or under ``jax.vmap(axis_name=...)`` in tests — and returns the synchronized
 (averaged, possibly lossy-reconstructed) gradients every worker applies.
 
-Per-leaf routing: tensors where low-rank/sparse compression pays off are
-compressed; small/1-D tensors (biases, norms, scalars) take the raw
-``pmean`` path exactly as in PowerSGD's reference implementation ("rank-1
-tensors are aggregated uncompressed").
+Per-leaf routing: every leaf carries a :class:`LeafPolicy` — which method
+ships it and with what knobs (rank, bits, topk ratio). The dedicated
+compressor classes apply ONE uniform policy (the paper's global config);
+:class:`~repro.core.composite.CompositeCompressor` mixes policies per
+tensor. Small/1-D tensors (biases, norms, scalars) take the raw ``pmean``
+path exactly as in PowerSGD's reference implementation ("rank-1 tensors are
+aggregated uncompressed").
+
+The method-specific math lives in :class:`LeafGroupHandler` subclasses that
+sync an arbitrary *subset* of the gradient leaves. A dedicated compressor
+drives one handler over every leaf; the composite drives one handler per
+method group — so a uniform-policy composite runs the byte-identical code
+path as the dedicated class (regression-tested bit-for-bit).
 
 Stacked tensors: models built with scan-over-layers stack per-layer weights
 as (L, n, m). Marking them ``stacked`` makes compression vmap over L,
@@ -25,6 +34,7 @@ an unrolled network).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Callable
 
 import jax
@@ -35,16 +45,24 @@ from repro.core.low_rank import matricize_shape
 
 __all__ = [
     "CompressorConfig",
+    "LeafPolicy",
     "LeafPlan",
+    "LeafGroupHandler",
+    "TopKHandler",
+    "QSGDHandler",
     "GradCompressor",
     "NoCompression",
     "TopKCompressor",
     "QSGDCompressor",
     "make_compressor",
     "build_plans",
+    "POLICY_METHODS",
 ]
 
 PyTree = Any
+
+# every method a LeafPolicy may name; 'raw' is the uncompressed fp32 pmean
+POLICY_METHODS = ("raw", "topk", "qsgd", "powersgd", "lq_sgd")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,6 +93,42 @@ class CompressorConfig:
     # error-feedback storage dtype ('float32' faithful; 'bfloat16' halves the
     # dominant per-device state at >=70B scale — beyond-paper, ablated)
     state_dtype: str = "float32"
+    # ---- per-leaf policies (repro.core.policy / repro.core.composite) ----
+    # None/'uniform': cfg.name everywhere (the paper's global config);
+    # 'auto': the cost-model planner picks per-leaf methods under
+    # `error_budget`; anything else is parsed as a policy spec string
+    # 'pattern=method:knob=v:...,pattern=...' (README "Per-leaf policies").
+    policy: str | None = None
+    error_budget: float = 0.3
+    # schedule: full-precision warm-up for the first W steps (in-graph,
+    # selected on the compressor state's own step counter)
+    warmup_steps: int = 0
+    # schedule: piecewise-constant decay caps ((start_step, rank_cap|None,
+    # bits_cap|None), ...) applied by rebuilding at phase boundaries
+    schedule_decay: tuple[tuple[int, int | None, int | None], ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafPolicy:
+    """Per-tensor compression decision: which method ships this leaf, and
+    with what knobs. Dedicated compressors use one uniform policy; the
+    composite carries one per leaf."""
+
+    method: str = "lq_sgd"   # one of POLICY_METHODS
+    rank: int = 1
+    bits: int = 8
+    bits_q: int | None = None   # factor-Q wire bits; None -> same as bits
+    topk_ratio: float = 0.01
+    min_numel: int | None = None  # per-leaf routing-threshold override
+
+    def __post_init__(self):
+        if self.method not in POLICY_METHODS:
+            raise ValueError(
+                f"unknown policy method {self.method!r}; options: {POLICY_METHODS}")
+
+    @property
+    def eff_bits_q(self) -> int:
+        return self.bits if self.bits_q is None else self.bits_q
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,29 +142,47 @@ class LeafPlan:
     stacked: bool  # leading dim is a scan-layer stack
     mat_shape: tuple[int, int] | None  # per-instance matricized (n, m)
     eff_rank: int
+    policy: LeafPolicy = LeafPolicy()
 
 
-def _leaf_plan(path: str, leaf, rank: int, min_numel: int, stacked: bool) -> LeafPlan:
+def _numel(shape: tuple[int, ...]) -> int:
+    n = 1
+    for s in shape:
+        n *= s
+    return n
+
+
+def _leaf_plan(path: str, leaf, policy: LeafPolicy, min_numel: int,
+               stacked: bool) -> LeafPlan:
     shape = tuple(leaf.shape)
     dtype = leaf.dtype
+    if policy.min_numel is not None:
+        min_numel = policy.min_numel
     inst_shape = shape[1:] if stacked else shape
-    numel = 1
-    for s in shape:
-        numel *= s
+    numel = _numel(shape)
     route = "raw"
     mat = None
     eff_rank = 0
-    if len(inst_shape) >= 2 and numel >= min_numel:
+    if (policy.method != "raw" and len(inst_shape) >= 2
+            and numel >= min_numel):
         n, m = matricize_shape(inst_shape)
-        r = min(rank, n, m)
+        r = min(policy.rank, n, m)
         if n * m > r * (n + m):  # compression actually pays
             route, mat, eff_rank = "lowrank", (n, m), r
-    return LeafPlan(path, shape, dtype, route, stacked, mat, eff_rank)
+    return LeafPlan(path, shape, dtype, route, stacked, mat, eff_rank, policy)
 
 
-def build_plans(abstract_grads: PyTree, rank: int, min_numel: int,
-                stacked: PyTree | None = None) -> tuple[LeafPlan, ...]:
-    """One LeafPlan per flattened leaf, in tree_flatten order."""
+def build_plans(abstract_grads: PyTree, rank: int = 1, min_numel: int = 1024,
+                stacked: PyTree | None = None, *,
+                policy: LeafPolicy | None = None,
+                policies: list[LeafPolicy] | None = None
+                ) -> tuple[LeafPlan, ...]:
+    """One LeafPlan per flattened leaf, in tree_flatten order.
+
+    ``policy`` applies one uniform policy; ``policies`` is a per-leaf list
+    (flatten order). With neither, a uniform powersgd policy at ``rank``
+    reproduces the historical shape-only routing.
+    """
     leaves, treedef = jax.tree_util.tree_flatten(abstract_grads)
     paths = [jax.tree_util.keystr(kp) for kp, _ in
              jax.tree_util.tree_flatten_with_path(abstract_grads)[0]]
@@ -120,33 +192,252 @@ def build_plans(abstract_grads: PyTree, rank: int, min_numel: int,
         stacked_leaves = jax.tree_util.tree_flatten(stacked)[0]
         if len(stacked_leaves) != len(leaves):
             raise ValueError("`stacked` pytree does not match grads structure")
+    if policies is None:
+        policy = policy or LeafPolicy(method="powersgd", rank=rank)
+        policies = [policy] * len(leaves)
+    if len(policies) != len(leaves):
+        raise ValueError(f"{len(policies)} policies for {len(leaves)} leaves")
     return tuple(
-        _leaf_plan(p, l, rank, min_numel, bool(s))
-        for p, l, s in zip(paths, leaves, stacked_leaves)
+        _leaf_plan(p, l, pol, min_numel, bool(s))
+        for p, l, pol, s in zip(paths, leaves, policies, stacked_leaves)
     )
 
 
+def _pmean_raw(g: jax.Array, comm: AxisComm, rec: CommRecord) -> jax.Array:
+    rec.add(g.size * 32, 1)  # fp32 wire, ring all-reduce payload ~ numel
+    return comm.pmean(g.astype(jnp.float32)).astype(g.dtype)
+
+
+def _group_by(items, keyf):
+    """Insertion-ordered grouping — a uniform group stays ONE group, so the
+    grouped call is byte-identical to the ungrouped one."""
+    groups: dict[Any, list] = {}
+    for it in items:
+        groups.setdefault(keyf(it), []).append(it)
+    return groups.items()
+
+
+# --------------------------------------------------------------------------
+# leaf-group handlers: the method-specific sync over a subset of leaves
+# --------------------------------------------------------------------------
+
+class LeafGroupHandler:
+    """Method-specific sync over an arbitrary subset of the grad leaves.
+
+    ``sync_group`` takes ``items = [(i, grad_leaf, plan), ...]`` (``i`` the
+    GLOBAL flattened-leaf index) plus the full compressor state, and returns
+    ``(outs, updates)`` where ``outs`` maps leaf index -> synced tensor and
+    ``updates`` maps state namespace -> {str(i): new_leaf_state}.
+
+    State contract: per-leaf state lives in namespace dicts keyed by the
+    global leaf index, so multiple handlers' namespaces merge into one
+    threaded state pytree (the composite's merged state) without collisions.
+    Namespaces in ``param_shaped`` hold param-shaped tensors (error
+    feedback) whose sharding mirrors the parameter's.
+    """
+
+    method = "raw"
+    namespaces: tuple[str, ...] = ()
+    param_shaped: tuple[str, ...] = ()
+    needs_prng = False  # wants state['key'] / state['step'] (QSGD)
+
+    def __init__(self, cfg: CompressorConfig):
+        self.cfg = cfg
+
+    # ---- per-leaf state ---------------------------------------------------
+    def init_leaf_state(self, key: jax.Array, i: int, pl: LeafPlan
+                        ) -> dict[str, jax.Array]:
+        return {}
+
+    # ---- the group sync ---------------------------------------------------
+    def sync_raw(self, g: jax.Array, pl: LeafPlan, comm: AxisComm,
+                 rec: CommRecord) -> jax.Array:
+        return _pmean_raw(g, comm, rec)
+
+    def sync_group(self, items, state: PyTree, comm: AxisComm,
+                   rec: CommRecord) -> tuple[dict[int, jax.Array], dict]:
+        return ({i: self.sync_raw(g, pl, comm, rec) for i, g, pl in items},
+                {})
+
+    # ---- static accounting ------------------------------------------------
+    def raw_wire_bits(self, pl: LeafPlan, numel: int) -> int:
+        return numel * 32
+
+    def leaf_wire_bits(self, pl: LeafPlan) -> int:
+        return self.raw_wire_bits(pl, _numel(pl.shape))
+
+
+class TopKHandler(LeafGroupHandler):
+    """TopK-SGD (Shi et al. 2019 / Aji & Heafield 2017) with error feedback.
+
+    Per compressed tensor: keep the top-k entries by magnitude of the
+    error-corrected gradient, zero the rest; the dense masked tensor is
+    pmean'd (the standard dense simulation of sparse all-reduce) while wire
+    accounting charges k * (32-bit value + ceil(log2(numel))-bit index) per
+    worker — the honest sparse payload (an index into numel slots never
+    needs a flat 32 bits).
+    """
+
+    method = "topk"
+    namespaces = ("err",)
+    param_shaped = ("err",)
+
+    @staticmethod
+    def _k(numel: int, ratio: float) -> int:
+        return max(1, int(numel * ratio))
+
+    @staticmethod
+    def index_bits(numel: int) -> int:
+        """Bits to address one of ``numel`` slots on the sparse wire."""
+        return max(1, math.ceil(math.log2(numel))) if numel > 1 else 1
+
+    def init_leaf_state(self, key, i, pl):
+        if pl.route != "lowrank":  # reuse routing: 'compressible'
+            return {}
+        return {"err": jnp.zeros(pl.shape, jnp.dtype(self.cfg.state_dtype))}
+
+    def sync_group(self, items, state, comm, rec):
+        from repro.core.codec import Float32Codec, codec_phase
+        outs: dict[int, jax.Array] = {}
+        new_err: dict[str, jax.Array] = {}
+        comp, kepts, account = [], [], []
+        for i, g, pl in items:
+            if pl.route != "lowrank":
+                outs[i] = self.sync_raw(g, pl, comm, rec)
+                continue
+            e = state["err"][str(i)]
+            g32 = g.astype(jnp.float32) + e.astype(jnp.float32)
+            flat = g32.reshape(-1)
+            k = self._k(flat.size, pl.policy.topk_ratio)
+            vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+            mask = jnp.zeros_like(flat).at[idx].set(1.0)
+            kept = flat * mask
+            new_err[str(i)] = (flat - kept).reshape(pl.shape).astype(
+                jnp.dtype(self.cfg.state_dtype))
+            comp.append((i, g, pl))
+            kepts.append(kept.reshape(pl.shape))
+            account.append(k * (32 + self.index_bits(flat.size)))
+        if comp:
+            # dense simulation of the sparse all-reduce through the fp32
+            # codec; accounting charges the k*(32+idx)-bit sparse payload
+            synced = codec_phase(kepts, [pl.stacked for _, _, pl in comp],
+                                 Float32Codec(), comm, rec,
+                                 avg_mode=self.cfg.avg_mode,
+                                 wire=self.cfg.wire,
+                                 fuse=self.cfg.fuse_collectives,
+                                 account_bits=account)
+            for (i, g, pl), s in zip(comp, synced):
+                outs[i] = s.astype(g.dtype)
+        return outs, {"err": new_err}
+
+    def leaf_wire_bits(self, pl):
+        numel = _numel(pl.shape)
+        if pl.route != "lowrank":
+            return self.raw_wire_bits(pl, numel)
+        return (self._k(numel, pl.policy.topk_ratio)
+                * (32 + self.index_bits(numel)))
+
+
+class QSGDHandler(LeafGroupHandler):
+    """QSGD (Alistarh et al. 2017): stochastic uniform quantization.
+
+    Derives per-worker, per-tensor, per-step PRNG keys from the shared
+    ``state['key']`` / ``state['step']`` (folded with the global leaf index,
+    so a composite group draws the same stream as the dedicated class).
+    """
+
+    method = "qsgd"
+    needs_prng = True
+
+    def _codec(self, bits: int):
+        from repro.core.codec import QSGDCodec
+        return QSGDCodec(bits=bits, backend=self.cfg.quant_backend)
+
+    def sync_group(self, items, state, comm, rec):
+        from repro.core.codec import codec_phase
+        base = jax.random.fold_in(state["key"], state["step"])
+        # independent stochastic rounding per worker
+        base = jax.random.fold_in(base, jax.lax.axis_index(comm.axis_names[-1]))
+        outs: dict[int, jax.Array] = {}
+        comp = []
+        for i, g, pl in items:
+            if pl.route != "lowrank":
+                outs[i] = self.sync_raw(g, pl, comm, rec)
+            else:
+                comp.append((i, g, pl))
+        # one codec == one wire dtype == one (fused) phase; per-leaf bits
+        # sub-group, and a uniform group stays a single phase call
+        for bits, sub in _group_by(comp, lambda it: it[2].policy.bits):
+            # stochastic rounding is unbiased under plain averaging; the
+            # linear QSGD codec makes both avg modes identical anyway
+            synced = codec_phase(
+                [g for _, g, _ in sub], [pl.stacked for _, _, pl in sub],
+                self._codec(bits), comm, rec, avg_mode="dequant_then_mean",
+                wire=self.cfg.wire, fuse=self.cfg.fuse_collectives,
+                keys=[jax.random.fold_in(base, i) for i, _, _ in sub])
+            for (i, g, pl), s in zip(sub, synced):
+                outs[i] = s.astype(g.dtype)
+        return outs, {}
+
+    def leaf_wire_bits(self, pl):
+        numel = _numel(pl.shape)
+        if pl.route != "lowrank":
+            return self.raw_wire_bits(pl, numel)
+        codec = self._codec(pl.policy.bits)
+        L = pl.shape[0] if pl.stacked else 1
+        return codec.wire_bits(numel) + codec.scale_bits(L)
+
+
+# --------------------------------------------------------------------------
+# compressors: one handler driven over the whole pytree
+# --------------------------------------------------------------------------
+
 class GradCompressor:
-    """Base: raw pmean for everything. Subclasses override leaf handling."""
+    """Base: raw pmean for everything. Subclasses swap the handler."""
+
+    method = "raw"
+    handler_cls: type[LeafGroupHandler] = LeafGroupHandler
 
     def __init__(self, cfg: CompressorConfig, abstract_grads: PyTree,
                  stacked: PyTree | None = None):
         self.cfg = cfg
         self.treedef = jax.tree_util.tree_structure(abstract_grads)
+        policy = LeafPolicy(method=self.method, rank=cfg.rank, bits=cfg.bits,
+                            bits_q=cfg.bits_q, topk_ratio=cfg.topk_ratio)
         self.plans = build_plans(abstract_grads, cfg.rank,
-                                 cfg.min_compress_numel, stacked)
+                                 cfg.min_compress_numel, stacked,
+                                 policy=policy)
+        self.handler = self.handler_cls(cfg)
 
     # ---- state -----------------------------------------------------------
     def init_state(self, key: jax.Array) -> PyTree:
-        return {}
+        state: dict[str, Any] = {ns: {} for ns in self.handler.namespaces}
+        for i, pl in enumerate(self.plans):
+            for ns, v in self.handler.init_leaf_state(key, i, pl).items():
+                state[ns][str(i)] = v
+        return state
+
+    @staticmethod
+    def _merge_state(state: PyTree, updates: dict) -> PyTree:
+        if not updates:
+            return state
+        new = dict(state)
+        for ns, sub in updates.items():
+            cur = dict(state.get(ns, {}))
+            cur.update(sub)
+            new[ns] = cur
+        return new
 
     # ---- the sync op -----------------------------------------------------
     def sync(self, grads: PyTree, state: PyTree, comm: AxisComm
              ) -> tuple[PyTree, PyTree, CommRecord]:
         rec = CommRecord()
         leaves = jax.tree_util.tree_flatten(grads)[0]
-        out = [self._raw_sync(g, comm, rec) for g in leaves]
-        return jax.tree_util.tree_unflatten(self.treedef, out), state, rec
+        items = list(zip(range(len(leaves)), leaves, self.plans))
+        outs, updates = self.handler.sync_group(items, state, comm, rec)
+        out = [outs[i] for i in range(len(leaves))]
+        return (jax.tree_util.tree_unflatten(self.treedef, out),
+                self._merge_state(state, updates), rec)
 
     def sync_once(self, grads: PyTree, state: PyTree,
                   axis_name: str = "solo") -> tuple[PyTree, PyTree, CommRecord]:
@@ -171,39 +462,36 @@ class GradCompressor:
         return strip(out), strip(st2), recs[0]
 
     # ---- sharding of per-worker state over the tensor-parallel axis ------
+    def _param_shaped_namespaces(self) -> tuple[str, ...]:
+        return self.handler.param_shaped
+
     def state_pspecs(self, state: PyTree, param_pspecs: PyTree, dp_axes):
         """PartitionSpecs for ``state`` leaves (WITHOUT the leading DP dim —
-        the train step prepends it). Error-feedback tensors mirror their
-        parameter's model-axis sharding; everything else replicates."""
+        the train step prepends it), as a structured
+        ``{namespace: {leaf_index: spec}}`` mapping. Namespaces the handler
+        declares ``param_shaped`` (error feedback) hold param-shaped tensors
+        keyed by the global flattened leaf index and mirror that parameter's
+        model-axis sharding; every other leaf replicates."""
         from jax.sharding import PartitionSpec as P
         pspecs_flat = jax.tree_util.tree_flatten(
             param_pspecs, is_leaf=lambda x: isinstance(x, P))[0]
-
-        def spec_for(path: str, leaf):
-            if "'err'" in path:
-                idx = int(path.split("'err'")[1].split("'")[1])
-                return pspecs_flat[idx]
-            return P(*([None] * leaf.ndim))
-
-        flat, treedef = jax.tree_util.tree_flatten_with_path(state)
-        specs = [spec_for(jax.tree_util.keystr(kp), leaf)
-                 for kp, leaf in flat]
-        return jax.tree_util.tree_unflatten(treedef, specs)
+        param_ns = set(self._param_shaped_namespaces())
+        rep = lambda leaf: P(*([None] * leaf.ndim))
+        specs: dict[str, Any] = {}
+        for ns, sub in state.items():
+            if ns in param_ns and isinstance(sub, dict):
+                specs[ns] = {k: pspecs_flat[int(k)] for k in sub}
+            else:
+                specs[ns] = jax.tree.map(rep, sub)
+        return specs
 
     # ---- helpers ---------------------------------------------------------
     def _raw_sync(self, g: jax.Array, comm: AxisComm, rec: CommRecord) -> jax.Array:
-        rec.add(g.size * 32, 1)  # fp32 wire, ring all-reduce payload ~ numel
-        return comm.pmean(g.astype(jnp.float32)).astype(g.dtype)
+        return _pmean_raw(g, comm, rec)
 
     # static accounting for tables -----------------------------------------
     def wire_bits_per_step(self) -> int:
-        rec = CommRecord()
-        for pl in self.plans:
-            numel = 1
-            for s in pl.shape:
-                numel *= s
-            rec.add(numel * 32)
-        return rec.bits_sent
+        return sum(self.handler.leaf_wire_bits(pl) for pl in self.plans)
 
 
 class NoCompression(GradCompressor):
@@ -211,131 +499,33 @@ class NoCompression(GradCompressor):
 
 
 class TopKCompressor(GradCompressor):
-    """TopK-SGD (Shi et al. 2019 / Aji & Heafield 2017) with error feedback.
+    """TopK-SGD driven over the whole pytree — see :class:`TopKHandler`."""
 
-    Per compressed tensor: keep the top-k entries by magnitude of the
-    error-corrected gradient, zero the rest; the dense masked tensor is
-    pmean'd (the standard dense simulation of sparse all-reduce) while wire
-    accounting charges k * (32-bit value + 32-bit index) per worker.
-    """
-
-    def init_state(self, key: jax.Array) -> PyTree:
-        errs = {}
-        edt = jnp.dtype(self.cfg.state_dtype)
-        for i, pl in enumerate(self.plans):
-            if pl.route == "lowrank":  # reuse routing: 'compressible'
-                errs[str(i)] = jnp.zeros(pl.shape, edt)
-        return {"err": errs}
-
-    def _k(self, numel: int) -> int:
-        return max(1, int(numel * self.cfg.topk_ratio))
-
-    def sync(self, grads, state, comm):
-        from repro.core.codec import Float32Codec, codec_phase
-        rec = CommRecord()
-        leaves = jax.tree_util.tree_flatten(grads)[0]
-        new_err = dict(state["err"])
-        out: list = [None] * len(leaves)
-        comp, kepts, account = [], [], []
-        for i, (g, pl) in enumerate(zip(leaves, self.plans)):
-            if pl.route != "lowrank":
-                out[i] = self._raw_sync(g, comm, rec)
-                continue
-            e = state["err"][str(i)]
-            g32 = g.astype(jnp.float32) + e.astype(jnp.float32)
-            flat = g32.reshape(-1)
-            k = self._k(flat.size)
-            vals, idx = jax.lax.top_k(jnp.abs(flat), k)
-            mask = jnp.zeros_like(flat).at[idx].set(1.0)
-            kept = flat * mask
-            new_err[str(i)] = (flat - kept).reshape(pl.shape).astype(
-                jnp.dtype(self.cfg.state_dtype))
-            comp.append((i, g, pl))
-            kepts.append(kept.reshape(pl.shape))
-            account.append(k * 64)  # (value, index) pairs on the wire
-        if comp:
-            # dense simulation of the sparse all-reduce through the fp32
-            # codec; accounting charges the k*(32+32)-bit sparse payload
-            synced = codec_phase(kepts, [pl.stacked for _, _, pl in comp],
-                                 Float32Codec(), comm, rec,
-                                 avg_mode=self.cfg.avg_mode, wire=self.cfg.wire,
-                                 fuse=self.cfg.fuse_collectives,
-                                 account_bits=account)
-            for (i, g, pl), s in zip(comp, synced):
-                out[i] = s.astype(g.dtype)
-        return (jax.tree_util.tree_unflatten(self.treedef, out),
-                {"err": new_err}, rec)
-
-    def wire_bits_per_step(self) -> int:
-        rec = CommRecord()
-        for pl in self.plans:
-            numel = 1
-            for s in pl.shape:
-                numel *= s
-            if pl.route == "lowrank":
-                rec.add(self._k(numel) * 64)
-            else:
-                rec.add(numel * 32)
-        return rec.bits_sent
+    method = "topk"
+    handler_cls = TopKHandler
 
 
 class QSGDCompressor(GradCompressor):
-    """QSGD (Alistarh et al. 2017): stochastic uniform quantization, s levels.
+    """QSGD baseline driven over the whole pytree — see :class:`QSGDHandler`.
 
     Included as an extra quantization baseline (the paper cites it as the
     canonical uniform scheme that log-quantization improves upon for
     heavy-tailed gradients).
     """
 
+    method = "qsgd"
+    handler_cls = QSGDHandler
+
     def init_state(self, key: jax.Array) -> PyTree:
         return {"key": key, "step": jnp.zeros((), jnp.int32)}
 
-    def _codec(self):
-        from repro.core.codec import QSGDCodec
-        return QSGDCodec(bits=self.cfg.bits, backend=self.cfg.quant_backend)
-
     def sync(self, grads, state, comm):
-        from repro.core.codec import codec_phase
-        rec = CommRecord()
-        leaves = jax.tree_util.tree_flatten(grads)[0]
-        base = jax.random.fold_in(state["key"], state["step"])
-        # independent stochastic rounding per worker
-        base = jax.random.fold_in(base, jax.lax.axis_index(comm.axis_names[-1]))
-        out: list = [None] * len(leaves)
-        comp = []
-        for i, (g, pl) in enumerate(zip(leaves, self.plans)):
-            if pl.route != "lowrank":
-                out[i] = self._raw_sync(g, comm, rec)
-            else:
-                comp.append((i, g, pl))
-        if comp:
-            # stochastic rounding is unbiased under plain averaging; the
-            # linear QSGD codec makes both avg modes identical anyway
-            synced = codec_phase(
-                [g for _, g, _ in comp], [pl.stacked for _, _, pl in comp],
-                self._codec(), comm, rec, avg_mode="dequant_then_mean",
-                wire=self.cfg.wire, fuse=self.cfg.fuse_collectives,
-                keys=[jax.random.fold_in(base, i) for i, _, _ in comp])
-            for (i, g, pl), s in zip(comp, synced):
-                out[i] = s.astype(g.dtype)
+        out, new_state, rec = super().sync(grads, state, comm)
         # advance the PRNG stream: without this, every sync re-draws the
         # SAME stochastic rounding (regression-tested)
-        new_state = {"key": state["key"], "step": state["step"] + 1}
-        return jax.tree_util.tree_unflatten(self.treedef, out), new_state, rec
-
-    def wire_bits_per_step(self) -> int:
-        rec = CommRecord()
-        codec = self._codec()
-        for pl in self.plans:
-            numel = 1
-            for s in pl.shape:
-                numel *= s
-            if pl.route == "lowrank":
-                L = pl.shape[0] if pl.stacked else 1
-                rec.add(codec.wire_bits(numel) + codec.scale_bits(L))
-            else:
-                rec.add(numel * 32)
-        return rec.bits_sent
+        new_state = dict(new_state)
+        new_state["step"] = state["step"] + 1
+        return out, new_state, rec
 
 
 def make_compressor(cfg: CompressorConfig, abstract_grads: PyTree,
@@ -343,6 +533,24 @@ def make_compressor(cfg: CompressorConfig, abstract_grads: PyTree,
     # local imports avoid a cycle (powersgd/lq_sgd import this module)
     from repro.core.powersgd import PowerSGDCompressor
     from repro.core.lq_sgd import LQSGDCompressor
+
+    if (cfg.policy not in (None, "uniform") or cfg.warmup_steps
+            or cfg.schedule_decay):
+        from repro.core.composite import CompositeCompressor, PolicySchedule
+        from repro.core.policy import plan_auto, resolve_policies
+        report = None
+        if cfg.policy == "auto":
+            # plan once; stash the report so launchers print the exact
+            # plan in force instead of re-running the planner
+            policies, report = plan_auto(abstract_grads, stacked, cfg=cfg)
+        else:
+            policies = resolve_policies(cfg, abstract_grads, stacked)
+        schedule = PolicySchedule(warmup_steps=cfg.warmup_steps,
+                                  decay=cfg.schedule_decay)
+        comp = CompositeCompressor(cfg, abstract_grads, stacked,
+                                   policies=policies, schedule=schedule)
+        comp.plan_report = report
+        return comp
 
     registry: dict[str, Callable[..., GradCompressor]] = {
         "none": NoCompression,

@@ -1,8 +1,9 @@
 """LQ-SGD — the paper's Algorithm 1 (PowerSGD + logarithmic quantization).
 
-Identical control flow to :class:`PowerSGDCompressor` — literally the same
-``sync`` — with the factor wire swapped from fp32 to the b-bit log-quantized
-:class:`~repro.core.codec.LogQuantCodec` (paper Eq. 5/6):
+Identical control flow to :class:`~repro.core.powersgd.PowerSGDHandler` —
+literally the same group sync — with the factor wire swapped from fp32 to
+the b-bit log-quantized :class:`~repro.core.codec.LogQuantCodec` (paper
+Eq. 5/6):
 
     scale  = pmax_i max|x_i|                       (shared quantization grid)
     codes  = round( log1p(a|x|/s) / log1p(a) * L ) (signed b-bit integers)
@@ -14,6 +15,12 @@ Identical control flow to :class:`PowerSGDCompressor` — literally the same
 ``pallas`` (the fused TPU kernels, interpret-mode off-TPU). b<=4 codes are
 nibble-packed two-per-int8, so the gathered arrays really are b/8 of the
 int8 bytes — wire accounting equals actual array bytes.
+
+Per-leaf bit-widths come from each plan's
+:class:`~repro.core.compressors.LeafPolicy` (``bits`` for the P phase,
+``bits_q`` for the Q phase — the paper allows b_p != b_q); leaves with
+different bit-widths sub-group into one collective per wire dtype, and a
+uniform group stays a single fused phase.
 
 Stacked (layer-scanned) tensors quantize with per-layer scales — the exact
 equivalent of per-tensor scales in an unrolled network.
@@ -32,35 +39,45 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.codec import LogQuantCodec, WireCodec, codec_phase
-from repro.core.powersgd import PowerSGDCompressor
+from repro.core.compressors import GradCompressor
+from repro.core.powersgd import PowerSGDHandler
 
-__all__ = ["LQSGDCompressor"]
+__all__ = ["LQSGDCompressor", "LQSGDHandler"]
 
 
-class LQSGDCompressor(PowerSGDCompressor):
+class LQSGDHandler(PowerSGDHandler):
     """See module docstring: PowerSGD control flow over a log-quantized wire."""
 
-    def _wire_codec(self, bits: int) -> WireCodec:
+    method = "lq_sgd"
+
+    def _codec(self, bits: int) -> WireCodec:
         return LogQuantCodec(bits=bits, alpha=self.cfg.alpha,
                              backend=self.cfg.quant_backend)
 
-    def _bits_p(self) -> int:
-        return self.cfg.bits
+    def _leaf_bits_p(self, pl) -> int:
+        return pl.policy.bits
 
-    def _bits_q(self) -> int:
-        return self.cfg.bits_q if self.cfg.bits_q is not None else self.cfg.bits
+    def _leaf_bits_q(self, pl) -> int:
+        return pl.policy.eff_bits_q
 
-    def _raw_sync(self, g, comm, rec):
+    def sync_raw(self, g, pl, comm, rec):
         # Algorithm 1's code-domain mean applies to the low-rank factors;
         # for raw leaves (biases/norms, sign-mixed small tensors) the
         # log-domain mean is badly biased (a quasi-geometric mean), so the
         # quantized raw path always averages dequantized values.
         out = codec_phase([g.astype(jnp.float32)], [False],
-                          self._wire_codec(self.cfg.bits), comm, rec,
+                          self._codec(pl.policy.bits), comm, rec,
                           avg_mode="dequant_then_mean", wire=self.cfg.wire,
                           fuse=False)[0]
         return out.astype(g.dtype)
 
-    def _raw_wire_bits(self, numel: int) -> int:
-        codec = self._wire_codec(self.cfg.bits)
+    def raw_wire_bits(self, pl, numel: int) -> int:
+        codec = self._codec(pl.policy.bits)
         return codec.wire_bits(numel) + codec.scale_bits(1)
+
+
+class LQSGDCompressor(GradCompressor):
+    """The paper's LQ-SGD driven over the whole pytree."""
+
+    method = "lq_sgd"
+    handler_cls = LQSGDHandler

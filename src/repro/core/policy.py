@@ -1,0 +1,353 @@
+"""Per-leaf policy resolution: spec parsing + the cost-model auto-planner.
+
+Three ways to assign a :class:`~repro.core.compressors.LeafPolicy` to every
+gradient leaf (``CompressorConfig.policy`` selects one; ``make_compressor``
+routes any non-uniform result to the CompositeCompressor):
+
+* **uniform** — ``cfg.name`` everywhere (the paper's global config).
+* **spec string** — ``"pattern=method[:knob=value]*"`` rules, comma-
+  separated, first match wins (fnmatch or substring against the leaf's
+  ``keystr`` path; ``*`` is the catch-all). Example::
+
+      embed=topk:topk_ratio=0.05,blocks=lq_sgd:rank=2:bits=4,*=lq_sgd:bits=8
+
+* **auto** — :func:`plan_auto` picks, per leaf, the cheapest method whose
+  *error proxy* fits under ``cfg.error_budget``.
+
+The auto-planner's cost model
+-----------------------------
+Per-step cost of shipping one leaf = interconnect time + compute time,
+using the roofline constants (:mod:`repro.roofline.hw`):
+
+    cost(policy) = wire_bits / 8 / ICI_LINK_BW  +  flops / PEAK_FLOPS_BF16
+
+``wire_bits`` is the EXACT static accounting the runtime charges (the same
+``leaf_wire_bits`` the handlers use, packed containers and scale sidebands
+included), so the planner optimizes what the wire actually carries.
+
+The error proxies are deliberately coarse *static* heuristics — per-step
+relative distortion, not final-accuracy guarantees (error feedback recycles
+the residual across steps, modelled as a constant ``ef_discount``):
+
+    raw                      : 0
+    low-rank r on (n, m)     : ef * sqrt(1 - H(r)/H(d)),  d = min(n, m)
+                               (power-law gradient spectrum, sigma_j ~ 1/j)
+    + log-quant to b bits    : + 2^-(b-1)
+    lq raw path (1-D leaves) : 2^-(b-1)            (no error feedback)
+    topk at ratio rho        : ef * sqrt(1 - rho)
+    qsgd at b bits           : 3 * 2^-(b-1)        (uniform grid penalty)
+
+Tightening the budget monotonically moves leaves toward higher-fidelity
+(more expensive) methods; ``error_budget=0`` degenerates to raw everywhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+from typing import Any, Sequence
+
+import jax
+
+from repro.core.compressors import (CompressorConfig, LeafPolicy,
+                                    POLICY_METHODS, _leaf_plan, _numel)
+from repro.roofline import hw
+
+__all__ = [
+    "CostModel",
+    "parse_policy_spec",
+    "parse_decay_spec",
+    "match_policies",
+    "plan_auto",
+    "resolve_policies",
+    "uniform_policy",
+    "format_plan_report",
+]
+
+PyTree = Any
+
+_NAME_ALIASES = {"none": "raw", "sgd": "raw"}
+
+# knob name -> caster, for spec strings
+_POLICY_KNOBS = {
+    "rank": int,
+    "bits": int,
+    "bits_q": int,
+    "topk_ratio": float,
+    "min_numel": int,
+}
+
+
+def uniform_policy(cfg: CompressorConfig) -> LeafPolicy:
+    method = _NAME_ALIASES.get(cfg.name, cfg.name)
+    return LeafPolicy(method=method, rank=cfg.rank, bits=cfg.bits,
+                      bits_q=cfg.bits_q, topk_ratio=cfg.topk_ratio)
+
+
+# --------------------------------------------------------------------------
+# spec strings
+# --------------------------------------------------------------------------
+
+def parse_policy_spec(spec: str) -> list[tuple[str, LeafPolicy]]:
+    """``"pattern=method[:knob=value]*"`` rules, comma-separated."""
+    rules: list[tuple[str, LeafPolicy]] = []
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        pat, sep, rhs = part.partition("=")
+        if not sep or not rhs:
+            raise ValueError(f"bad policy rule {part!r}: want pattern=method[:knob=value]*")
+        fields = rhs.split(":")
+        method = _NAME_ALIASES.get(fields[0].strip(), fields[0].strip())
+        kw: dict[str, Any] = {}
+        for f in fields[1:]:
+            k, ksep, v = f.partition("=")
+            k = k.strip()
+            if not ksep or k not in _POLICY_KNOBS:
+                raise ValueError(f"bad policy knob {f!r} in rule {part!r}; "
+                                 f"options: {sorted(_POLICY_KNOBS)}")
+            kw[k] = _POLICY_KNOBS[k](v)
+        rules.append((pat.strip(), LeafPolicy(method=method, **kw)))
+    if not rules:
+        raise ValueError(f"empty policy spec {spec!r}")
+    return rules
+
+
+def parse_decay_spec(spec: str) -> tuple[tuple[int, int | None, int | None], ...]:
+    """``"STEP[:rank=R][:bits=B]"`` entries, comma-separated — the
+    piecewise-constant caps of :class:`~repro.core.composite.PolicySchedule`.
+    Example: ``"200:rank=1,500:bits=4"``."""
+    out = []
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        fields = part.split(":")
+        step = int(fields[0])
+        rank_cap = bits_cap = None
+        for f in fields[1:]:
+            k, sep, v = f.partition("=")
+            if k == "rank" and sep:
+                rank_cap = int(v)
+            elif k == "bits" and sep:
+                bits_cap = int(v)
+            else:
+                raise ValueError(f"bad decay knob {f!r} in {part!r} "
+                                 "(want rank=R or bits=B)")
+        out.append((step, rank_cap, bits_cap))
+    if not out:
+        raise ValueError(f"empty decay spec {spec!r}")
+    return tuple(out)
+
+
+def _match(path: str, pattern: str) -> bool:
+    return (pattern == "*" or pattern in path
+            or fnmatch.fnmatch(path, pattern))
+
+
+def match_policies(abstract_grads: PyTree,
+                   rules: Sequence[tuple[str, LeafPolicy]],
+                   default: LeafPolicy) -> list[LeafPolicy]:
+    """First matching rule wins; unmatched leaves get ``default``."""
+    flat = jax.tree_util.tree_flatten_with_path(abstract_grads)[0]
+    out = []
+    for kp, _leaf in flat:
+        path = jax.tree_util.keystr(kp)
+        for pat, pol in rules:
+            if _match(path, pat):
+                out.append(pol)
+                break
+        else:
+            out.append(default)
+    return out
+
+
+# --------------------------------------------------------------------------
+# the auto-planner
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Roofline-derived per-step cost + the error-proxy constants."""
+
+    link_bw: float = hw.ICI_LINK_BW        # bytes/s per ICI link
+    peak_flops: float = hw.PEAK_FLOPS_BF16
+    ef_discount: float = 0.25  # error feedback recycles the residual
+
+    def wire_s(self, bits: int) -> float:
+        return bits / 8.0 / self.link_bw
+
+    def flops_s(self, flops: float) -> float:
+        return flops / self.peak_flops
+
+    def cost_s(self, wire_bits: int, flops: float) -> float:
+        return self.wire_s(wire_bits) + self.flops_s(flops)
+
+
+def _spectral_mass(k: int) -> float:
+    """H(k) = sum_{j<=k} j^-2 — energy of the top-k modes of a 1/j
+    power-law spectrum. Exact partial sum below 4096, tail-corrected
+    asymptote above (H(inf) = pi^2/6)."""
+    if k <= 0:
+        return 0.0
+    if k <= 4096:
+        return sum(1.0 / (j * j) for j in range(1, k + 1))
+    return 1.6449340668482264 - 1.0 / k
+
+
+def _lowrank_err(r: int, n: int, m: int) -> float:
+    d = min(n, m)
+    if r >= d:
+        return 0.0
+    return max(0.0, 1.0 - _spectral_mass(r) / _spectral_mass(d)) ** 0.5
+
+
+def _quant_err(bits: int) -> float:
+    return 2.0 ** -(bits - 1)
+
+
+def _candidates(pl, numel: int, cm: CostModel, *,
+                ranks, bits_options, topk_ratios, qsgd_bits
+                ) -> list[tuple[LeafPolicy, float]]:
+    """(policy, error-proxy) candidates for one leaf; the caller attaches
+    wire bits via the real handler accounting."""
+    out: list[tuple[LeafPolicy, float]] = [(LeafPolicy(method="raw"), 0.0)]
+    inst = pl.shape[1:] if pl.stacked else pl.shape
+    compressible = pl.route == "lowrank"
+    if compressible:
+        n, m = pl.mat_shape
+        for r in ranks:
+            r_eff = min(r, n, m)
+            lr = cm.ef_discount * _lowrank_err(r_eff, n, m)
+            out.append((LeafPolicy(method="powersgd", rank=r), lr))
+            for b in bits_options:
+                out.append((LeafPolicy(method="lq_sgd", rank=r, bits=b),
+                            lr + _quant_err(b)))
+        for rho in topk_ratios:
+            out.append((LeafPolicy(method="topk", topk_ratio=rho),
+                        cm.ef_discount * (1.0 - rho) ** 0.5))
+        for b in qsgd_bits:
+            out.append((LeafPolicy(method="qsgd", bits=b),
+                        3.0 * _quant_err(b)))
+    elif len(inst) >= 1:
+        # raw-route leaves (1-D / tiny): lq_sgd still quantizes them on its
+        # raw path — the only method that saves wire here (no EF: per-step
+        # distortion is the full quantization error)
+        for b in bits_options:
+            out.append((LeafPolicy(method="lq_sgd", bits=b), _quant_err(b)))
+    return out
+
+
+def _leaf_flops(pol: LeafPolicy, pl) -> float:
+    numel = _numel(pl.shape)
+    if pl.route != "lowrank" or pol.method in ("raw",):
+        return float(numel)            # touch-once
+    if pol.method in ("powersgd", "lq_sgd"):
+        n, m = pl.mat_shape
+        L = pl.shape[0] if pl.stacked else 1
+        # P = GQ, Q = G^T P, recon P Q^T: three rank-r passes over (n, m)
+        return 6.0 * L * n * m * pl.eff_rank
+    if pol.method == "topk":
+        return 10.0 * numel            # top_k selection
+    return 8.0 * numel                 # quantize/dequantize
+
+
+def plan_auto(abstract_grads: PyTree, stacked: PyTree | None = None, *,
+              cfg: CompressorConfig | None = None,
+              error_budget: float | None = None,
+              cost_model: CostModel | None = None,
+              ranks: Sequence[int] = (1, 2, 4),
+              bits_options: Sequence[int] = (4, 8),
+              topk_ratios: Sequence[float] = (0.01, 0.05),
+              qsgd_bits: Sequence[int] = (8,),
+              ) -> tuple[list[LeafPolicy], list[dict]]:
+    """Pick, per leaf, the cheapest policy whose error proxy fits the
+    budget. Returns ``(policies, report)`` — report rows carry the chosen
+    policy, its predicted wire bits / cost / error, and the raw baseline.
+    """
+    from repro.core.composite import handler_for
+    cfg = cfg or CompressorConfig()
+    budget = cfg.error_budget if error_budget is None else error_budget
+    cm = cost_model or CostModel()
+
+    flat = jax.tree_util.tree_flatten_with_path(abstract_grads)[0]
+    paths = [jax.tree_util.keystr(kp) for kp, _ in flat]
+    leaves = [l for _, l in flat]
+    if stacked is None:
+        stacked_flags = [False] * len(leaves)
+    else:
+        stacked_flags = jax.tree_util.tree_flatten(stacked)[0]
+
+    handlers: dict[str, Any] = {}
+
+    def wire_bits(pol: LeafPolicy, path, leaf, st) -> tuple[int, Any]:
+        pl = _leaf_plan(path, leaf, pol, cfg.min_compress_numel, bool(st))
+        h = handlers.setdefault(pol.method, handler_for(pol.method, cfg))
+        return h.leaf_wire_bits(pl), pl
+
+    policies: list[LeafPolicy] = []
+    report: list[dict] = []
+    for path, leaf, st in zip(paths, leaves, stacked_flags):
+        # route probe (any non-raw method sees the same routing test)
+        probe = _leaf_plan(path, leaf, LeafPolicy(method="powersgd",
+                                                  rank=min(ranks)),
+                           cfg.min_compress_numel, bool(st))
+        numel = _numel(probe.shape)
+        best = None  # (cost_s, wire, err, pol)
+        for pol, err in _candidates(probe, numel, cm, ranks=ranks,
+                                    bits_options=bits_options,
+                                    topk_ratios=topk_ratios,
+                                    qsgd_bits=qsgd_bits):
+            if err > budget:
+                continue
+            bits, pl = wire_bits(pol, path, leaf, st)
+            cost = cm.cost_s(bits, _leaf_flops(pol, pl))
+            key = (cost, bits, err)
+            if best is None or key < best[0]:
+                best = (key, pol, bits, err)
+        if best is None:  # unreachable for budget >= 0 (raw has err 0)
+            best = ((cm.cost_s(numel * 32, numel), numel * 32, 0.0),
+                    LeafPolicy(method="raw"), numel * 32, 0.0)
+        (cost, bits, err), pol = best[0], best[1]
+        policies.append(pol)
+        report.append({
+            "path": path, "shape": list(probe.shape), "numel": numel,
+            "method": pol.method, "rank": pol.rank, "bits": pol.bits,
+            "topk_ratio": pol.topk_ratio,
+            "wire_bits": best[2], "est_err": best[3],
+            "est_cost_us": cost * 1e6, "raw_bits": numel * 32,
+        })
+    return policies, report
+
+
+def format_plan_report(report: list[dict]) -> str:
+    """Human-readable planner summary (train launcher, benchmarks)."""
+    lines = ["per-leaf plan (auto):"]
+    tot = sum(r["wire_bits"] for r in report)
+    raw = sum(r["raw_bits"] for r in report)
+    for r in report:
+        knobs = {"powersgd": f"r{r['rank']}",
+                 "lq_sgd": f"r{r['rank']}b{r['bits']}",
+                 "topk": f"p{r['topk_ratio']}",
+                 "qsgd": f"b{r['bits']}"}.get(r["method"], "")
+        lines.append(
+            f"  {r['path']:<40} {str(tuple(r['shape'])):<20} "
+            f"-> {r['method']}{knobs:<8} {r['wire_bits']/8e3:8.2f}KB "
+            f"(raw {r['raw_bits']/8e3:.2f}KB, err~{r['est_err']:.3f})")
+    lines.append(f"  total {tot/8e6:.3f}MB/step vs raw {raw/8e6:.3f}MB/step "
+                 f"({raw/max(tot,1):.1f}x)")
+    return "\n".join(lines)
+
+
+def resolve_policies(cfg: CompressorConfig, abstract_grads: PyTree,
+                     stacked: PyTree | None = None) -> list[LeafPolicy]:
+    """CompressorConfig.policy -> one LeafPolicy per flattened leaf."""
+    spec = cfg.policy
+    if spec in (None, "uniform"):
+        n = len(jax.tree_util.tree_flatten(abstract_grads)[0])
+        return [uniform_policy(cfg)] * n
+    if spec == "auto":
+        policies, _ = plan_auto(abstract_grads, stacked, cfg=cfg)
+        return policies
+    return match_policies(abstract_grads, parse_policy_spec(spec),
+                          uniform_policy(cfg))

@@ -5,15 +5,21 @@ Warm-started single power iteration with error feedback:
     G' = G + E ;  P = G'Q ;  allreduce(P) ;  P^ = orth(P)
     Q  = G'^T P^ ;  allreduce(Q) ;  G^ = P^ Q^T ;  E = G' - G^
 
-Both factor phases ship through the wire-codec layer
-(:func:`repro.core.codec.codec_phase`): PowerSGD uses the fp32
-:class:`~repro.core.codec.Float32Codec`; LQ-SGD subclasses this and swaps
-in the b-bit :class:`~repro.core.codec.LogQuantCodec` — control flow is
-shared, only ``_wire_codec`` differs.  With ``cfg.fuse_collectives=True``
-each phase's per-tensor gathers batch into ONE flat collective (2 + n_raw
-collectives per step, numerically identical to the unfused path — tested).
-Stacked (L, n, m) tensors are compressed per-layer via vmap — equivalent to
-per-layer PowerSGD in an unrolled network.
+The math lives in :class:`PowerSGDHandler`, a leaf-group handler
+(:mod:`repro.core.compressors`) that syncs an arbitrary subset of the grad
+leaves — the dedicated :class:`PowerSGDCompressor` drives it over every
+leaf; the composite drives it over its powersgd group. Both factor phases
+ship through the wire-codec layer (:func:`repro.core.codec.codec_phase`):
+PowerSGD uses the fp32 :class:`~repro.core.codec.Float32Codec`; LQ-SGD
+subclasses the handler and swaps in the b-bit log codec — control flow is
+shared, only ``_codec`` differs. Per-leaf ranks come from each plan's
+:class:`~repro.core.compressors.LeafPolicy`; per-leaf wire bits sub-group a
+phase by codec (a uniform group stays ONE fused collective per phase).
+With ``cfg.fuse_collectives=True`` each phase's per-tensor gathers batch
+into ONE flat collective (2 + n_raw collectives per step, numerically
+identical to the unfused path — tested). Stacked (L, n, m) tensors are
+compressed per-layer via vmap — equivalent to per-layer PowerSGD in an
+unrolled network.
 
 Distributed-correctness invariants (tested):
   * warm-start Q is initialized from the SAME key on every worker, so all
@@ -30,11 +36,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.codec import Float32Codec, WireCodec, codec_phase
-from repro.core.comm import AxisComm, CommRecord
-from repro.core.compressors import GradCompressor, LeafPlan
+from repro.core.compressors import (GradCompressor, LeafGroupHandler,
+                                    LeafPlan, _group_by, _numel)
 from repro.core.low_rank import orthonormalize
 
-__all__ = ["PowerSGDCompressor"]
+__all__ = ["PowerSGDCompressor", "PowerSGDHandler"]
 
 PyTree = Any
 
@@ -56,58 +62,62 @@ def _mat_ops(pl: LeafPlan):
             lambda p, q: p @ q.T)
 
 
-class PowerSGDCompressor(GradCompressor):
-    """Low-rank gradient compression with error feedback + warm start."""
+class PowerSGDHandler(LeafGroupHandler):
+    """Low-rank power-iteration sync over a leaf group (fp32 factor wire)."""
 
-    # ---------------------------------------------------------------- state
-    def init_state(self, key: jax.Array) -> PyTree:
-        err, q = {}, {}
-        edt = jnp.dtype(self.cfg.state_dtype)
-        for i, pl in enumerate(self.plans):
-            if pl.route != "lowrank":
-                continue
-            n, m = pl.mat_shape
-            r = pl.eff_rank
-            k = jax.random.fold_in(key, i)
-            if pl.stacked:
-                L = pl.shape[0]
-                q[str(i)] = jax.random.normal(k, (L, m, r), jnp.float32)
-            else:
-                q[str(i)] = jax.random.normal(k, (m, r), jnp.float32)
-            err[str(i)] = jnp.zeros(pl.shape, edt)
-        return {"err": err, "q": q}
+    method = "powersgd"
+    namespaces = ("err", "q")
+    param_shaped = ("err",)
 
-    # ---------------------------------------------------------------- wire
-    def _wire_codec(self, bits: int) -> WireCodec:
-        """The factor wire. PowerSGD: raw fp32 (overridden by LQ-SGD)."""
+    # ---- the factor wire (overridden by LQ-SGD) --------------------------
+    def _codec(self, bits: int) -> WireCodec:
         del bits
         return Float32Codec()
 
-    def _bits_p(self) -> int:
+    def _leaf_bits_p(self, pl: LeafPlan) -> int:
         return 32
 
-    def _bits_q(self) -> int:
+    def _leaf_bits_q(self, pl: LeafPlan) -> int:
         return 32
 
-    def _phase(self, xs: list, flags: list, bits: int, comm: AxisComm,
-               rec: CommRecord) -> list:
-        return codec_phase(xs, flags, self._wire_codec(bits), comm, rec,
-                           avg_mode=self.cfg.avg_mode, wire=self.cfg.wire,
-                           fuse=self.cfg.fuse_collectives)
+    # ---- state -----------------------------------------------------------
+    def init_leaf_state(self, key, i, pl):
+        if pl.route != "lowrank":
+            return {}
+        n, m = pl.mat_shape
+        r = pl.eff_rank
+        k = jax.random.fold_in(key, i)
+        if pl.stacked:
+            q = jax.random.normal(k, (pl.shape[0], m, r), jnp.float32)
+        else:
+            q = jax.random.normal(k, (m, r), jnp.float32)
+        return {"err": jnp.zeros(pl.shape, jnp.dtype(self.cfg.state_dtype)),
+                "q": q}
 
-    # ----------------------------------------------------------------- sync
-    def sync(self, grads: PyTree, state: PyTree, comm: AxisComm):
-        rec = CommRecord()
-        leaves = jax.tree_util.tree_flatten(grads)[0]
-        new_err = dict(state["err"])
-        new_q = dict(state["q"])
-        out: list = [None] * len(leaves)
+    # ---- one collective phase, sub-grouped by wire codec ------------------
+    def _phase(self, xs: list, flags: list, bits_list: list, comm, rec) -> list:
+        out: list = [None] * len(xs)
+        for bits, idxs in _group_by(range(len(xs)), lambda j: bits_list[j]):
+            res = codec_phase([xs[j] for j in idxs],
+                              [flags[j] for j in idxs],
+                              self._codec(bits), comm, rec,
+                              avg_mode=self.cfg.avg_mode, wire=self.cfg.wire,
+                              fuse=self.cfg.fuse_collectives)
+            for j, r in zip(idxs, res):
+                out[j] = r
+        return out
+
+    # ---- the group sync ---------------------------------------------------
+    def sync_group(self, items, state, comm, rec):
+        outs: dict[int, jax.Array] = {}
+        new_err: dict[str, jax.Array] = {}
+        new_q: dict[str, jax.Array] = {}
         comp = []
-        for i, (g, pl) in enumerate(zip(leaves, self.plans)):
+        for i, g, pl in items:
             if pl.route == "lowrank":
                 comp.append((i, g, pl))
             else:
-                out[i] = self._raw_sync(g, comm, rec)
+                outs[i] = self.sync_raw(g, pl, comm, rec)
         if comp:
             flags = [pl.stacked for _, _, pl in comp]
             ops = [_mat_ops(pl) for _, _, pl in comp]
@@ -118,14 +128,18 @@ class PowerSGDCompressor(GradCompressor):
                         + state["err"][str(i)].astype(jnp.float32).reshape(shp))
                 g_efs.append(g_ef)                                # Alg.1 l.4
                 ps.append(mm_p(g_ef, state["q"][str(i)]))         # Alg.1 l.10
-            ps = self._phase(ps, flags, self._bits_p(), comm, rec)
+            ps = self._phase(ps, flags,
+                             [self._leaf_bits_p(pl) for _, _, pl in comp],
+                             comm, rec)
             # ---- orthonormalize + Q phase ----
             p_hats, qs = [], []
             for (_, mm_p, mm_q, orth, _), g_ef, p in zip(ops, g_efs, ps):
                 p_hat = orth(p)                                   # Alg.1 l.11
                 p_hats.append(p_hat)
                 qs.append(mm_q(g_ef, p_hat))                      # Alg.1 l.15
-            qs = self._phase(qs, flags, self._bits_q(), comm, rec)
+            qs = self._phase(qs, flags,
+                             [self._leaf_bits_q(pl) for _, _, pl in comp],
+                             comm, rec)
             # ---- reconstruct + error feedback ----
             for (i, g, pl), (_, _, _, _, recon), g_ef, p_hat, q_new in zip(
                     comp, ops, g_efs, p_hats, qs):
@@ -133,27 +147,25 @@ class PowerSGDCompressor(GradCompressor):
                 new_err[str(i)] = (g_ef - g_hat).reshape(pl.shape).astype(
                     jnp.dtype(self.cfg.state_dtype))              # Alg.1 l.20
                 new_q[str(i)] = q_new
-                out[i] = g_hat.reshape(pl.shape).astype(g.dtype)
-        synced = jax.tree_util.tree_unflatten(self.treedef, out)
-        return synced, {"err": new_err, "q": new_q}, rec
+                outs[i] = g_hat.reshape(pl.shape).astype(g.dtype)
+        return outs, {"err": new_err, "q": new_q}
 
     # ----------------------------------------------------------- accounting
-    def wire_bits_per_step(self) -> int:
-        rec = CommRecord()
-        cp, cq = self._wire_codec(self._bits_p()), self._wire_codec(self._bits_q())
-        for pl in self.plans:
-            numel = 1
-            for s in pl.shape:
-                numel *= s
-            if pl.route != "lowrank":
-                rec.add(self._raw_wire_bits(numel))
-                continue
-            n, m = pl.mat_shape
-            r = pl.eff_rank
-            L = pl.shape[0] if pl.stacked else 1
-            rec.add(cp.wire_bits(L * n * r) + cp.scale_bits(L))  # P (+ scales)
-            rec.add(cq.wire_bits(L * m * r) + cq.scale_bits(L))  # Q (+ scales)
-        return rec.bits_sent
+    def leaf_wire_bits(self, pl):
+        numel = _numel(pl.shape)
+        if pl.route != "lowrank":
+            return self.raw_wire_bits(pl, numel)
+        cp = self._codec(self._leaf_bits_p(pl))
+        cq = self._codec(self._leaf_bits_q(pl))
+        n, m = pl.mat_shape
+        r = pl.eff_rank
+        L = pl.shape[0] if pl.stacked else 1
+        return (cp.wire_bits(L * n * r) + cp.scale_bits(L)   # P (+ scales)
+                + cq.wire_bits(L * m * r) + cq.scale_bits(L))  # Q (+ scales)
 
-    def _raw_wire_bits(self, numel: int) -> int:
-        return numel * 32
+
+class PowerSGDCompressor(GradCompressor):
+    """Low-rank gradient compression with error feedback + warm start."""
+
+    method = "powersgd"
+    handler_cls = PowerSGDHandler

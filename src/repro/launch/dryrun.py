@@ -220,6 +220,13 @@ def main() -> None:
     ap.add_argument("--out", default=None, help="JSON output path")
     ap.add_argument("--compressor", default="lq_sgd",
                     choices=["none", "sgd", "topk", "qsgd", "powersgd", "lq_sgd"])
+    ap.add_argument("--policy", default=None,
+                    help="per-leaf policy: 'uniform', 'auto' (cost-model "
+                         "planner), or a spec string (README)")
+    ap.add_argument("--error-budget", type=float, default=0.3,
+                    help="auto-planner: max per-leaf error proxy")
+    ap.add_argument("--warmup", type=int, default=0,
+                    help="in-graph full-precision warm-up steps")
     ap.add_argument("--rank", type=int, default=1)
     ap.add_argument("--bits", type=int, default=8)
     ap.add_argument("--wire", default="allgather_codes",
@@ -253,7 +260,10 @@ def main() -> None:
                                 bits=args.bits, wire=args.wire,
                                 avg_mode=args.avg_mode,
                                 state_dtype=args.comp_dtype,
-                                fuse_collectives=args.fuse)
+                                fuse_collectives=args.fuse,
+                                policy=args.policy,
+                                error_budget=args.error_budget,
+                                warmup_steps=args.warmup)
     archs = list_archs() if args.arch == "all" else [args.arch]
     shapes = sorted(INPUT_SHAPES) if args.shape == "all" else [args.shape]
     records = []

@@ -41,6 +41,19 @@ def main() -> None:
     ap.add_argument("--optimizer", default="sgd", choices=["sgd", "adam"])
     ap.add_argument("--compressor", default="lq_sgd",
                     choices=["none", "topk", "qsgd", "powersgd", "lq_sgd"])
+    ap.add_argument("--policy", default=None,
+                    help="per-leaf policy: 'uniform' (default), 'auto' "
+                         "(cost-model planner), or a spec string "
+                         "'pattern=method:knob=v,...'; falls back to the "
+                         "arch config's compression_policy hint")
+    ap.add_argument("--error-budget", type=float, default=0.3,
+                    help="auto-planner: max per-leaf error proxy")
+    ap.add_argument("--warmup", type=int, default=0,
+                    help="schedule: full-precision sync for the first W "
+                         "steps (in-graph, no recompilation)")
+    ap.add_argument("--decay", default=None,
+                    help="schedule: piecewise rank/bit caps, e.g. "
+                         "'200:rank=1,500:bits=4' (rebuilds at boundaries)")
     ap.add_argument("--rank", type=int, default=1)
     ap.add_argument("--bits", type=int, default=8)
     ap.add_argument("--alpha", type=float, default=10.0)
@@ -66,12 +79,21 @@ def main() -> None:
         mesh = make_mesh((len(jax.devices()), 1), ("data", "model"))
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    from repro.core.policy import parse_decay_spec
+    decay = parse_decay_spec(args.decay) if args.decay else ()
     comp_cfg = CompressorConfig(name=args.compressor, rank=args.rank,
                                 bits=args.bits, alpha=args.alpha,
                                 wire=args.wire, avg_mode=args.avg_mode,
                                 fuse_collectives=args.fuse,
-                                state_dtype=args.comp_dtype)
+                                state_dtype=args.comp_dtype,
+                                policy=args.policy or cfg.compression_policy,
+                                error_budget=args.error_budget,
+                                warmup_steps=args.warmup,
+                                schedule_decay=decay)
     compressor = make_model_compressor(cfg, comp_cfg)
+    if getattr(compressor, "plan_report", None):
+        from repro.core.policy import format_plan_report
+        print(format_plan_report(compressor.plan_report))
     optimizer = make_optimizer(args.optimizer, args.lr)
     step_fn, state_sh, batch_sh = build_train_step(
         cfg, mesh, compressor, optimizer, remat_scan=not args.smoke)
@@ -91,14 +113,36 @@ def main() -> None:
         jstep = jax.jit(step_fn, donate_argnums=0)
         print(f"arch={cfg.name} params={sum(x.size for x in jax.tree.leaves(state['params']))/1e6:.1f}M "
               f"mesh={dict(mesh.shape)} compressor={args.compressor} "
+              f"policy={comp_cfg.policy or 'uniform'} "
               f"wire/step={compressor.wire_bits_per_step()/8e6:.3f}MB "
               f"(uncompressed={sum(x.size for x in jax.tree.leaves(state['params']))*4/1e6:.1f}MB)")
-        trainer = Trainer(jstep, batch_fn,
-                          TrainerConfig(steps=args.steps,
-                                        log_every=args.log_every,
-                                        ckpt_every=args.ckpt_every,
-                                        ckpt_path=args.ckpt_path))
-        trainer.run(state)
+        tc = lambda steps: TrainerConfig(steps=steps,
+                                         log_every=args.log_every,
+                                         ckpt_every=args.ckpt_every,
+                                         ckpt_path=args.ckpt_path)
+        bounds = ([b for b in compressor.schedule.boundaries()
+                   if 0 < b < args.steps]
+                  if (decay or args.warmup) else [])
+        if not bounds:
+            Trainer(jstep, batch_fn, tc(args.steps)).run(state)
+        else:
+            # schedule phases (rank/bit decay caps + the end of warm-up):
+            # rebuild the traced step at each boundary; Trainer resumes
+            # from state['step'], so each phase trains until its end step
+            comp_prev = compressor
+            for seg_start, seg_end in zip([0] + bounds,
+                                          bounds + [args.steps]):
+                comp_t = compressor.at_step(seg_start)
+                if comp_t is not comp_prev:
+                    state["comp"] = comp_t.adapt_state(state["comp"])
+                    step_fn, _, _ = build_train_step(
+                        cfg, mesh, comp_t, optimizer,
+                        remat_scan=not args.smoke)
+                    jstep = jax.jit(step_fn, donate_argnums=0)
+                    print(f"# schedule phase @step {seg_start}: "
+                          f"wire/step={comp_t.wire_bits_per_step()/8e6:.3f}MB")
+                    comp_prev = comp_t
+                state = Trainer(jstep, batch_fn, tc(seg_end)).run(state)
 
 
 if __name__ == "__main__":

@@ -31,7 +31,7 @@ from repro.train.loss import lm_loss
 from repro.train.optimizer import Optimizer
 
 __all__ = ["build_train_step", "init_train_state", "make_model_compressor",
-           "dp_axes_of", "broadcast_comp_state"]
+           "abstract_grads_of", "dp_axes_of", "broadcast_comp_state"]
 
 PyTree = Any
 
@@ -53,12 +53,18 @@ def broadcast_comp_state(state: PyTree, n_dp: int) -> PyTree:
                         state)
 
 
+def abstract_grads_of(cfg: ModelConfig) -> tuple[PyTree, PyTree]:
+    """(abstract grad pytree, stacked flags) for this model — what the
+    compressor and the policy planner consume (no allocation)."""
+    abstract = jax.eval_shape(lambda k: init_params(cfg, k),
+                              jax.random.PRNGKey(0))
+    return abstract, stacked_flags(abstract)
+
+
 def make_model_compressor(cfg: ModelConfig, comp_cfg: CompressorConfig
                           ) -> GradCompressor:
     """Compressor bound to this model's grad pytree (abstract — no alloc)."""
-    abstract = jax.eval_shape(lambda k: init_params(cfg, k),
-                              jax.random.PRNGKey(0))
-    flags = stacked_flags(abstract)
+    abstract, flags = abstract_grads_of(cfg)
     return make_compressor(comp_cfg, abstract, flags)
 
 

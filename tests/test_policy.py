@@ -1,0 +1,399 @@
+"""Per-leaf policy tests: composite/dedicated equivalence, schedules, the
+auto-planner's cost model, honest TopK accounting, structured state pspecs.
+
+Collective semantics via ``jax.vmap(axis_name=...)`` — the same named-axis
+code path the production shard_map runs (see test_compressors.py).
+"""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import (AxisComm, CompositeCompressor, CompressorConfig,
+                        LeafPolicy, PolicySchedule, make_compressor,
+                        parse_policy_spec, plan_auto)
+from repro.core.policy import (match_policies, parse_decay_spec,
+                               resolve_policies, uniform_policy)
+
+from conftest import broadcast_state
+
+N = 4
+
+
+def _grads(key, n=N):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w": jax.random.normal(k1, (n, 64, 32)),
+        "b": jax.random.normal(k2, (n, 32)),
+        "scan": jax.random.normal(k3, (n, 3, 48, 16)),
+    }
+
+
+def _abstract(grads):
+    return {k: jax.ShapeDtypeStruct(v.shape[1:], v.dtype) for k, v in grads.items()}
+
+
+STACKED = {"w": False, "b": False, "scan": True}
+
+
+def _run(comp, grads, steps=1):
+    state = broadcast_state(comp.init_state(jax.random.PRNGKey(42)), N)
+    recs = []
+
+    def worker(g, st):
+        out, st2, rec = comp.sync(g, st, AxisComm(("data",)))
+        recs.append(rec)
+        return out, st2
+
+    wf = jax.jit(jax.vmap(worker, axis_name="data"))
+    out = None
+    for _ in range(steps):
+        out, state = wf(grads, state)
+    return out, state, recs[0]
+
+
+# --------------------------------------------------------------------------
+# tentpole invariant: uniform composite == dedicated, bit for bit
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fuse", [False, True])
+@pytest.mark.parametrize("name", ["topk", "qsgd", "powersgd", "lq_sgd"])
+def test_uniform_composite_bit_for_bit(name, fuse):
+    grads = _grads(jax.random.PRNGKey(0))
+    cfg = CompressorConfig(name=name, rank=2, bits=8, topk_ratio=0.1,
+                           fuse_collectives=fuse)
+    ded = make_compressor(cfg, _abstract(grads), STACKED)
+    uni = CompositeCompressor(
+        cfg, _abstract(grads), STACKED,
+        policies=[LeafPolicy(method=ded.method, rank=2, bits=8,
+                             topk_ratio=0.1)] * 3)
+    out_d, _, _ = _run(ded, grads, steps=3)
+    out_u, _, _ = _run(uni, grads, steps=3)
+    for a, b in zip(jax.tree.leaves(out_d), jax.tree.leaves(out_u)):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), name
+    assert ded.wire_bits_per_step() == uni.wire_bits_per_step()
+
+
+def test_uniform_raw_composite_matches_none():
+    grads = _grads(jax.random.PRNGKey(1))
+    cfg = CompressorConfig(name="none")
+    ded = make_compressor(cfg, _abstract(grads), STACKED)
+    uni = CompositeCompressor(cfg, _abstract(grads), STACKED,
+                              policies=[LeafPolicy(method="raw")] * 3)
+    out_d, _, _ = _run(ded, grads)
+    out_u, _, _ = _run(uni, grads)
+    for a, b in zip(jax.tree.leaves(out_d), jax.tree.leaves(out_u)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------------
+# schedules
+# --------------------------------------------------------------------------
+
+def test_warmup_zero_equals_no_schedule():
+    grads = _grads(jax.random.PRNGKey(2))
+    cfg = CompressorConfig(name="lq_sgd", rank=2)
+    pols = [LeafPolicy(method="lq_sgd", rank=2)] * 3
+    a = CompositeCompressor(cfg, _abstract(grads), STACKED, policies=pols)
+    b = CompositeCompressor(cfg, _abstract(grads), STACKED, policies=pols,
+                            schedule=PolicySchedule(warmup_steps=0))
+    out_a, st_a, _ = _run(a, grads, steps=2)
+    out_b, st_b, _ = _run(b, grads, steps=2)
+    for la, lb in zip(jax.tree.leaves((out_a, st_a)),
+                      jax.tree.leaves((out_b, st_b))):
+        assert np.array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_warmup_full_precision_then_compressed():
+    grads = _grads(jax.random.PRNGKey(3))
+    cfg = CompressorConfig(name="lq_sgd", rank=2)
+    comp = CompositeCompressor(cfg, _abstract(grads), STACKED,
+                               policies=[LeafPolicy(method="lq_sgd", rank=2)] * 3,
+                               schedule=PolicySchedule(warmup_steps=2))
+    state = broadcast_state(comp.init_state(jax.random.PRNGKey(42)), N)
+
+    def worker(g, st):
+        out, st2, _ = comp.sync(g, st, AxisComm(("data",)))
+        return out, st2
+
+    wf = jax.jit(jax.vmap(worker, axis_name="data"))
+    exact = jnp.mean(grads["w"], 0)
+    for step in range(4):
+        out, state = wf(grads, state)
+        dev = float(jnp.linalg.norm(out["w"][0] - exact)
+                    / jnp.linalg.norm(exact))
+        if step < 2:  # warm: exact fp32 mean, error feedback held at zero
+            assert dev < 1e-5, (step, dev)
+            for v in jax.tree.leaves(state["err"]):
+                assert not np.any(np.asarray(v))
+        else:         # compression kicks in: lossy, EF starts accumulating
+            assert dev > 1e-4, (step, dev)
+    assert int(state["step"][0]) == 4
+    assert comp.warmup_extra_bits() > 0
+
+
+def test_decay_phases_and_state_adaptation():
+    grads = _grads(jax.random.PRNGKey(4))
+    cfg = CompressorConfig(name="lq_sgd", rank=4, bits=8)
+    sched = PolicySchedule(decay=((10, 2, None), (20, 1, 4)))
+    comp = CompositeCompressor(cfg, _abstract(grads), STACKED,
+                               policies=[LeafPolicy(method="lq_sgd", rank=4,
+                                                    bits=8)] * 3,
+                               schedule=sched)
+    assert sched.boundaries() == [10, 20]
+    assert comp.at_step(5) is comp  # no cap active yet -> no rebuild
+    c10 = comp.at_step(10)
+    c20 = comp.at_step(20)
+    assert c10 is not comp and c20 is not c10
+    ranks = lambda c: [pl.eff_rank for pl in c.plans if pl.route == "lowrank"]
+    assert max(ranks(c10)) == 2 and max(ranks(c20)) == 1
+    bits = lambda c: {pl.policy.bits for pl in c.plans}
+    assert bits(c20) == {4}
+    # wire shrinks monotonically through the phases
+    assert (comp.wire_bits_per_step() > c10.wire_bits_per_step()
+            > c20.wire_bits_per_step())
+    # state carries across: err kept, warm Q column-truncated
+    _, state, _ = _run(comp, grads, steps=1)
+    st10 = c10.adapt_state(state)
+    for k, v in st10["q"].items():
+        assert v.shape[-1] == c10.plans[int(k)].eff_rank
+        np.testing.assert_array_equal(np.asarray(v),
+                                      np.asarray(state["q"][k][..., :v.shape[-1]]))
+    for k in state["err"]:
+        np.testing.assert_array_equal(np.asarray(st10["err"][k]),
+                                      np.asarray(state["err"][k]))
+    # the adapted state actually runs in the decayed composite
+    out, _, _ = _run_with_state(c10, grads, st10)
+    for leaf in jax.tree.leaves(out):
+        assert not bool(jnp.any(jnp.isnan(leaf)))
+
+
+def _run_with_state(comp, grads, state):
+    def worker(g, st):
+        out, st2, rec = comp.sync(g, st, AxisComm(("data",)))
+        return out, st2
+
+    out, st2 = jax.vmap(worker, axis_name="data")(grads, state)
+    return out, st2, None
+
+
+def test_warmup_end_is_a_rebuild_boundary():
+    """A W>0 graph carries the fp32 shadow all-reduce at every step (the
+    where-selection keeps both operands live), so the schedule exposes W as
+    a boundary and at_step(W) drops the warm-up machinery."""
+    grads = _grads(jax.random.PRNGKey(15))
+    cfg = CompressorConfig(name="lq_sgd", rank=2)
+    sched = PolicySchedule(warmup_steps=2, decay=((10, 1, None),))
+    comp = CompositeCompressor(cfg, _abstract(grads), STACKED,
+                               policies=[LeafPolicy(method="lq_sgd",
+                                                    rank=2)] * 3,
+                               schedule=sched)
+    assert sched.boundaries() == [2, 10]
+    assert comp.at_step(1) is comp
+    steady = comp.at_step(2)
+    assert steady is not comp
+    assert steady.schedule.warmup_steps == 0
+    assert comp.warmup_extra_bits() > 0 and steady.warmup_extra_bits() == 0
+    # compressed wire accounting is unchanged by dropping the shadow
+    assert steady.wire_bits_per_step() == comp.wire_bits_per_step()
+
+
+def test_parse_decay_spec():
+    assert parse_decay_spec("200:rank=1,500:bits=4") == (
+        (200, 1, None), (500, None, 4))
+    with pytest.raises(ValueError):
+        parse_decay_spec("200:rk=1")
+
+
+# --------------------------------------------------------------------------
+# mixed policies
+# --------------------------------------------------------------------------
+
+def test_mixed_policy_groups_state_and_accounting():
+    grads = _grads(jax.random.PRNGKey(5))
+    cfg = CompressorConfig(name="lq_sgd")
+    pols = [LeafPolicy(method="topk", topk_ratio=0.1),      # b -> raw route
+            LeafPolicy(method="lq_sgd", rank=2, bits=4),
+            LeafPolicy(method="qsgd", bits=8)]
+    # flatten order of the dict fixture: b, scan, w
+    comp = CompositeCompressor(cfg, _abstract(grads), STACKED,
+                               policies=[pols[1], pols[0], pols[2]])
+    st = comp.init_state(jax.random.PRNGKey(0))
+    assert set(st) == {"step", "err", "q", "key"}  # merged namespaces
+    out, state, rec = _run(comp, grads, steps=2)
+    for leaf in jax.tree.leaves(out):
+        for i in range(1, N):  # all workers agree
+            np.testing.assert_allclose(leaf[0], leaf[i], atol=1e-5)
+    assert rec.bits_sent == comp.wire_bits_per_step()
+    by_method = comp.wire_bits_by_method()
+    assert set(by_method) == {"topk", "lq_sgd", "qsgd"}
+    assert sum(by_method.values()) == comp.wire_bits_per_step()
+
+
+def test_per_leaf_bits_subgroup_one_phase_per_wire_dtype():
+    """Heterogeneous bit-widths within the lq group sub-group by codec: the
+    fused phase count is one per distinct wire dtype, not one per tensor."""
+    grads = _grads(jax.random.PRNGKey(6))
+    cfg = CompressorConfig(name="lq_sgd", fuse_collectives=True)
+    comp = CompositeCompressor(
+        cfg, _abstract(grads), STACKED,
+        policies=[LeafPolicy(method="lq_sgd", rank=2, bits=8),
+                  LeafPolicy(method="lq_sgd", bits=8),   # raw-route 'b'
+                  LeafPolicy(method="lq_sgd", rank=2, bits=16)])
+    _, _, rec = _run(comp, grads)
+    # P phase: {8,16} -> 2 fused collectives; Q phase: 2; raw 'b': 1
+    assert rec.n_collectives == 5, rec.n_collectives
+    assert rec.bits_sent == comp.wire_bits_per_step()
+
+
+# --------------------------------------------------------------------------
+# structured state pspecs (satellite: no more keystr parsing)
+# --------------------------------------------------------------------------
+
+def test_structured_state_pspecs_mirror_param_sharding():
+    grads = _grads(jax.random.PRNGKey(7))
+    param_pspecs = {"w": P(None, "model"), "b": P(None),
+                    "scan": P(None, "model", None)}
+    cfg = CompressorConfig(name="lq_sgd", rank=2)
+    for comp in (make_compressor(cfg, _abstract(grads), STACKED),
+                 CompositeCompressor(
+                     cfg, _abstract(grads), STACKED,
+                     policies=[LeafPolicy(method="lq_sgd", rank=2),
+                               LeafPolicy(method="topk", topk_ratio=0.1),
+                               LeafPolicy(method="qsgd")])):
+        st = comp.init_state(jax.random.PRNGKey(0))
+        specs = comp.state_pspecs(st, param_pspecs, ("data",))
+        flat_params = jax.tree_util.tree_flatten(
+            param_pspecs, is_leaf=lambda x: isinstance(x, P))[0]
+        # error feedback mirrors its parameter's sharding, keyed by index
+        for k, spec in specs["err"].items():
+            assert spec == flat_params[int(k)], (k, spec)
+        # everything else replicates at its own rank
+        for ns in set(specs) - {"err"}:
+            for leaf, spec in zip(jax.tree.leaves(st[ns]),
+                                  jax.tree.leaves(
+                                      specs[ns],
+                                      is_leaf=lambda x: isinstance(x, P))):
+                assert spec == P(*([None] * leaf.ndim))
+
+
+# --------------------------------------------------------------------------
+# honest TopK wire accounting (satellite)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(64, 32), (1024, 1024)])
+def test_topk_index_bits_accounting(shape):
+    grads = {"w": jax.random.normal(jax.random.PRNGKey(8), (N,) + shape)}
+    cfg = CompressorConfig(name="topk", topk_ratio=0.01)
+    comp = make_compressor(cfg, _abstract(grads))
+    numel = shape[0] * shape[1]
+    k = max(1, int(numel * 0.01))
+    idx_bits = math.ceil(math.log2(numel))
+    assert comp.wire_bits_per_step() == k * (32 + idx_bits)
+    assert comp.wire_bits_per_step() < k * 64  # the old flat-32 accounting
+    # the executed sync charges the same honest payload
+    _, _, rec = _run(comp, grads)
+    assert rec.bits_sent == comp.wire_bits_per_step()
+
+
+def test_topk_index_bits_grow_with_numel():
+    small = {"w": jax.ShapeDtypeStruct((64, 32), jnp.float32)}
+    large = {"w": jax.ShapeDtypeStruct((2048, 1024), jnp.float32)}
+    cfg = CompressorConfig(name="topk", topk_ratio=0.01)
+    per_kept = lambda ab: (
+        make_compressor(cfg, ab).wire_bits_per_step()
+        / max(1, int(ab["w"].shape[0] * ab["w"].shape[1] * 0.01)))
+    assert per_kept(small) == 32 + 11   # 2048 slots
+    assert per_kept(large) == 32 + 21   # 2M slots
+
+
+# --------------------------------------------------------------------------
+# policy specs + the auto-planner
+# --------------------------------------------------------------------------
+
+def test_parse_policy_spec_and_match():
+    rules = parse_policy_spec(
+        "scan=lq_sgd:rank=2:bits=4,w=topk:topk_ratio=0.05,*=lq_sgd:bits=8")
+    assert rules[0][1] == LeafPolicy(method="lq_sgd", rank=2, bits=4)
+    abstract = _abstract(_grads(jax.random.PRNGKey(9)))
+    pols = match_policies(abstract, rules, LeafPolicy(method="raw"))
+    by_path = dict(zip(sorted(abstract), pols))  # flatten order is sorted keys
+    assert by_path["scan"].method == "lq_sgd" and by_path["scan"].bits == 4
+    assert by_path["w"].method == "topk"
+    assert by_path["b"].method == "lq_sgd" and by_path["b"].bits == 8
+    with pytest.raises(ValueError):
+        parse_policy_spec("w=lq_sgd:volume=11")
+    with pytest.raises(ValueError):
+        parse_policy_spec("w=warp_drive")
+
+
+def test_resolve_policies_uniform_and_aliases():
+    abstract = _abstract(_grads(jax.random.PRNGKey(10)))
+    cfg = CompressorConfig(name="none")
+    assert all(p.method == "raw" for p in resolve_policies(cfg, abstract))
+    assert uniform_policy(CompressorConfig(name="sgd")).method == "raw"
+
+
+def test_make_compressor_routes_composite():
+    abstract = _abstract(_grads(jax.random.PRNGKey(11)))
+    for cfg in (CompressorConfig(name="lq_sgd", policy="auto"),
+                CompressorConfig(name="lq_sgd", policy="w=topk,*=lq_sgd"),
+                CompressorConfig(name="lq_sgd", warmup_steps=3),
+                CompressorConfig(name="lq_sgd",
+                                 schedule_decay=((5, 1, None),))):
+        comp = make_compressor(cfg, abstract, STACKED)
+        assert isinstance(comp, CompositeCompressor), cfg
+    assert not isinstance(
+        make_compressor(CompressorConfig(name="lq_sgd"), abstract, STACKED),
+        CompositeCompressor)
+
+
+def test_auto_plan_cheaper_than_uniform_at_default_budget():
+    abstract = _abstract(_grads(jax.random.PRNGKey(12)))
+    cfg = CompressorConfig(name="lq_sgd", rank=1, bits=8)
+    uniform = make_compressor(cfg, abstract, STACKED)
+    auto = make_compressor(dataclasses.replace(cfg, policy="auto"),
+                           abstract, STACKED)
+    assert auto.wire_bits_per_step() <= uniform.wire_bits_per_step()
+
+
+def test_auto_plan_budget_dial():
+    """Tighter budgets buy fidelity with bits; budget 0 degenerates to raw
+    (error proxy 0) everywhere."""
+    abstract = _abstract(_grads(jax.random.PRNGKey(13)))
+    wire = {}
+    for budget in (0.0, 0.075, 0.3):
+        pols, report = plan_auto(abstract, STACKED, error_budget=budget)
+        wire[budget] = sum(r["wire_bits"] for r in report)
+        assert all(r["est_err"] <= budget for r in report)
+    assert wire[0.0] >= wire[0.075] >= wire[0.3]
+    pols0, _ = plan_auto(abstract, STACKED, error_budget=0.0)
+    assert all(p.method == "raw" for p in pols0)
+
+
+def test_auto_plan_report_totals_match_handlers():
+    """The report's predicted wire bits ARE the runtime accounting."""
+    abstract = _abstract(_grads(jax.random.PRNGKey(14)))
+    cfg = CompressorConfig(name="lq_sgd")
+    pols, report = plan_auto(abstract, STACKED, cfg=cfg)
+    comp = CompositeCompressor(cfg, abstract, STACKED, policies=pols)
+    assert sum(r["wire_bits"] for r in report) == comp.wire_bits_per_step()
+
+
+def test_per_leaf_min_numel_override():
+    """A policy can force compression of a leaf below the global routing
+    threshold (the planner/spec escape hatch for small-but-hot tensors)."""
+    abstract = {"w": jax.ShapeDtypeStruct((20, 10), jnp.float32)}  # 200 el.
+    cfg = CompressorConfig(name="lq_sgd", rank=1)
+    default = CompositeCompressor(cfg, abstract,
+                                  policies=[LeafPolicy(method="lq_sgd")])
+    forced = CompositeCompressor(
+        cfg, abstract,
+        policies=[LeafPolicy(method="lq_sgd", min_numel=128)])
+    assert default.plans[0].route == "raw"
+    assert forced.plans[0].route == "lowrank"
+    assert forced.wire_bits_per_step() < default.wire_bits_per_step()

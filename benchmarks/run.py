@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV (scaffold contract):
   * gia_ssim      -> paper Fig. 5 (SSIM/PSNR under gradient inversion,
                      cold-start AND steady-state attack points)
   * quant_kernel  -> §IV-C quantization-overhead claim + kernel parity
+  * step_time     -> wall-clock throughput: sync loop vs async runtime
+                     (steps/sec, tokens/sec, host-blocked fraction)
 
 Every section module implements the shared JSON contract:
 
@@ -38,19 +40,20 @@ def main() -> None:
                     help="fewer steps (CI-speed)")
     ap.add_argument("--only", default=None,
                     choices=["comm_cost", "policy_sweep", "convergence",
-                             "gia_ssim", "quant_kernel"])
+                             "gia_ssim", "quant_kernel", "step_time"])
     ap.add_argument("--json", action="store_true",
                     help="also write each section's BENCH_*.json")
     args = ap.parse_args()
 
     from benchmarks import (comm_cost, convergence, gia_ssim, policy_sweep,
-                            quant_kernel)
+                            quant_kernel, step_time)
 
     # policy_sweep AFTER comm_cost: it merges into BENCH_comm_cost.json
     sections = {
         "comm_cost": comm_cost,
         "policy_sweep": policy_sweep,
         "quant_kernel": quant_kernel,
+        "step_time": step_time,
         "convergence": convergence,
         "gia_ssim": gia_ssim,
     }

@@ -1,0 +1,151 @@
+"""Wall-clock throughput: the reference synchronous loop vs the async
+runtime — the first bench tracking steps/sec rather than bytes (PowerSGD's
+own evaluation is explicit that compression only pays off end-to-end;
+ROADMAP north star: "as fast as the hardware allows").
+
+Both rows drive the SAME jitted, explicitly-sharded train step (the math
+is bit-for-bit identical — tests/test_runtime.py asserts final params are
+equal), so the delta is pure host-side scheduling:
+
+  * ``sync_loop``      — Trainer: batch built on the hot path, metrics
+                         ``float()``-synced every logged step.
+  * ``async_runtime``  — AsyncRunner: prefetched device batches, metric
+                         fetch deferred one log interval.
+
+Reported per row: steps/sec, tokens/sec, host_blocked_fraction (main-thread
+time stuck in batch build + metric sync + checkpoint IO over wall time).
+``BENCH_step_time.json`` carries the rows + the async/sync speedup so the
+trajectory is regression-tracked per PR next to the byte-side benches.
+
+The loop shape is deliberately host-heavy-per-step (log_every=1,
+ckpt_every=5 — both rows run the identical schedule): on this CPU smoke
+scale the step math is milliseconds, so what the benchmark resolves is the
+*runtime scheduling* delta, which is exactly the quantity that survives to
+real meshes (where batch build + metric sync + checkpoint serialization
+cost the same host milliseconds but the device work no longer hides them
+for free).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import jax
+
+from repro.configs.base import ModelConfig, attn
+from repro.core import CompressorConfig
+from repro.data.synthetic import LMDataConfig, lm_batch
+from repro.launch.mesh import make_mesh, use_mesh
+from repro.train.optimizer import sgd
+from repro.train.runtime import (AsyncRunner, RuntimeConfig,
+                                 build_sharded_step, sharded_init)
+from repro.train.step import make_model_compressor
+from repro.train.trainer import Trainer, TrainerConfig
+
+BENCH_JSON = "BENCH_step_time.json"
+
+BATCH, SEQ = 4, 16
+CKPT_EVERY = 5
+
+
+def _smoke_cfg() -> ModelConfig:
+    return ModelConfig(name="bench-tiny", arch_type="dense", source="bench",
+                       d_model=32, vocab_size=128, pattern=(attn(),),
+                       repeats=1, n_heads=2, n_kv_heads=2, head_dim=16,
+                       d_ff=64, dtype="float32")
+
+
+def _run_mode(mode: str, jstep, batch_fn, state, steps: int) -> dict:
+    ckpt_path = os.path.join(tempfile.mkdtemp(prefix="bench_step_time_"),
+                             f"{mode}.ckpt")
+    if mode == "sync_loop":
+        runner = Trainer(jstep, batch_fn,
+                         TrainerConfig(steps=steps, log_every=1,
+                                       ckpt_every=CKPT_EVERY,
+                                       ckpt_path=ckpt_path, verbose=False))
+    else:
+        # deep prefetch: smoke batches are tiny, so let the input thread
+        # drain the whole run's batches up front and exit — an always-live
+        # thread costs more in lock handoffs than it saves at this scale
+        runner = AsyncRunner(jstep, batch_fn,
+                             RuntimeConfig(steps=steps, log_every=1,
+                                           ckpt_every=CKPT_EVERY,
+                                           ckpt_path=ckpt_path,
+                                           verbose=False, prefetch=steps))
+    t0 = time.time()
+    state = runner.run(state)
+    jax.block_until_ready(state)
+    wall = time.time() - t0
+    sps = steps / wall
+    return {"mode": mode, "steps": steps, "wall_s": wall,
+            "steps_per_s": sps, "tokens_per_s": sps * BATCH * SEQ,
+            "host_blocked_fraction": runner.host_s / wall}
+
+
+def bench(quick: bool = False) -> tuple[list[tuple[str, float, str]], dict]:
+    """Shared benchmarks.run contract: (csv rows, BENCH_step_time.json).
+
+    Modes are run in alternation for ``repeats`` rounds and each mode
+    reports its best round: an OS scheduling hiccup (2-core CI runners)
+    hits whichever round it lands on, so per-mode best is the stable
+    quantity to track across PRs. Every round's steps/sec is recorded in
+    the payload (``all_rounds``) so the spread is visible next to the
+    headline numbers.
+    """
+    steps, repeats = (40, 4) if quick else (100, 5)
+    mesh = make_mesh((len(jax.devices()), 1), ("data", "model"))
+    cfg = _smoke_cfg()
+    comp = make_model_compressor(
+        cfg, CompressorConfig(name="lq_sgd", rank=1, bits=8,
+                              min_compress_numel=256))
+    opt = sgd(0.05)
+    data = LMDataConfig(vocab_size=cfg.vocab_size, seq_len=SEQ, batch=BATCH)
+    batch_fn = lambda i: lm_batch(data, i)
+
+    rows: list[tuple[str, float, str]] = []
+    best: dict[str, dict] = {}
+    with use_mesh(mesh):
+        jstep, st_sh, _, _ = build_sharded_step(
+            cfg, mesh, comp, opt, sample_batch=batch_fn(0), remat_scan=False)
+        # compile outside the timed region (both modes share the executable)
+        warm = sharded_init(cfg, jax.random.PRNGKey(0), opt, comp, mesh,
+                            st_sh)
+        warm, _ = jstep(warm, batch_fn(0))
+        jax.block_until_ready(warm)
+        del warm
+        all_rounds: dict[str, list[float]] = {}
+        for _ in range(repeats):
+            for mode in ("sync_loop", "async_runtime"):
+                state = sharded_init(cfg, jax.random.PRNGKey(0), opt, comp,
+                                     mesh, st_sh)
+                jax.block_until_ready(state)
+                r = _run_mode(mode, jstep, batch_fn, state, steps)
+                all_rounds.setdefault(mode, []).append(
+                    round(r["steps_per_s"], 1))
+                if (mode not in best
+                        or r["steps_per_s"] > best[mode]["steps_per_s"]):
+                    best[mode] = r
+    results = [best["sync_loop"], best["async_runtime"]]
+    for r in results:
+        rows.append((f"step_time/{r['mode']}", r["wall_s"] / steps * 1e6,
+                     f"steps/s={r['steps_per_s']:.1f} "
+                     f"host_blocked={r['host_blocked_fraction']:.2f}"))
+    speedup = results[1]["steps_per_s"] / results[0]["steps_per_s"]
+    rows.append(("step_time/speedup", 0.0, f"async_vs_sync={speedup:.2f}x"))
+    payload = {"bench": "step_time", "schema": 1, "quick": quick,
+               "arch": cfg.name, "batch": BATCH, "seq": SEQ,
+               "compressor": "lq_sgd_r1_b8", "log_every": 1,
+               "ckpt_every": CKPT_EVERY, "repeats": repeats,
+               "all_rounds_steps_per_s": all_rounds,
+               "rows": results, "speedup_async_vs_sync": speedup}
+    return rows, payload
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    for name, us, derived in bench(quick=args.quick)[0]:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,1 +1,2 @@
-"""checkpoint subsystem."""
+"""checkpoint subsystem: msgpack+zstd pytree IO (`io.save`/`io.restore`)
+and the background writer (`io.AsyncCheckpointer`) the async runtime uses."""

@@ -8,6 +8,8 @@ sharding pytree is given.
 from __future__ import annotations
 
 import os
+import queue
+import threading
 from typing import Any
 
 import jax
@@ -21,7 +23,7 @@ except ImportError:  # clean env: fall back to stdlib zlib (see _compress)
     zstandard = None
 import zlib
 
-__all__ = ["save", "restore"]
+__all__ = ["save", "restore", "peek_step", "AsyncCheckpointer"]
 
 _ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
 
@@ -70,6 +72,22 @@ def save(path: str, tree: Any, *, level: int = 3) -> int:
     return len(comp)
 
 
+def peek_step(path: str) -> int:
+    """Read only the top-level ``['step']`` counter. Resume needs the step
+    BEFORE it can build the restore shapes (schedule phases change the
+    compressor state's shapes), and a full :func:`restore` would
+    materialize every leaf a second time just to learn it. One decompress
+    + msgpack parse is still paid (the whole tree is one zstd frame), but
+    no array copies or device transfers."""
+    with open(path, "rb") as f:
+        payload = _decompress(f.read())
+    entries = msgpack.unpackb(payload)["entries"]
+    e = entries.get("['step']")
+    if e is None:
+        raise KeyError(f"checkpoint {path!r} has no ['step'] entry")
+    return int(np.frombuffer(e["data"], np.dtype(e["dtype"]))[0])
+
+
 def restore(path: str, like: Any, shardings: Any | None = None) -> Any:
     """``like``: pytree of arrays or ShapeDtypeStructs with the target
     structure. Raises on any mismatch (no silent partial restores)."""
@@ -98,3 +116,65 @@ def restore(path: str, like: Any, shardings: Any | None = None) -> Any:
             val = jax.device_put(val, sh)
         leaves.append(val)
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class AsyncCheckpointer:
+    """Background checkpoint writer: the train loop hands over a
+    *device-side, donated-safe* copy of the state (``jax.tree.map(jnp.copy,
+    state)`` — the copy op is dispatched before the next step donates the
+    original buffers) and keeps dispatching; this worker thread does the
+    ``device_get`` + msgpack/zstd serialization off the hot path.
+
+    The queue is bounded (one write in flight + one waiting): if disk can't
+    keep up with ``ckpt_every``, ``submit`` applies backpressure instead of
+    hoarding device snapshots. Writes reuse :func:`save`'s tmp-then-rename,
+    so a crash mid-write never corrupts the previous checkpoint.
+    """
+
+    def __init__(self, path: str, *, level: int = 3):
+        self.path = path
+        self.level = level
+        self._q: queue.Queue = queue.Queue(maxsize=2)
+        self._err: BaseException | None = None
+        self._thread = threading.Thread(
+            target=self._worker, name="async-ckpt", daemon=True)
+        self._thread.start()
+
+    def _worker(self) -> None:
+        while True:
+            tree = self._q.get()
+            try:
+                if tree is None:
+                    return
+                if self._err is None:  # after a failure, drain without writing
+                    if callable(tree):  # deferred materializer (see submit)
+                        tree = tree()
+                    save(self.path, jax.device_get(tree), level=self.level)
+            except BaseException as e:  # surfaced by drain()
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def submit(self, tree: Any) -> None:
+        """Enqueue a snapshot (blocks only when 2 writes are already
+        queued). ``tree`` is a device/host pytree, or a zero-arg callable
+        returning one — the runtime submits a callable whose device->host
+        transfer happens HERE, on the worker, in a few packed pulls."""
+        self._q.put(tree)
+
+    def drain(self) -> None:
+        """Block until every submitted snapshot is on disk; re-raise the
+        first background write error."""
+        self._q.join()
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise RuntimeError(
+                f"async checkpoint write to {self.path!r} failed") from err
+
+    def close(self) -> None:
+        """Stop the worker (does not raise — call ``drain`` first to check
+        for write errors)."""
+        if self._thread.is_alive():
+            self._q.put(None)
+            self._thread.join(timeout=60)
+

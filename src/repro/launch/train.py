@@ -7,6 +7,12 @@
 
 On a real TPU cluster each host runs this module unmodified (jax picks up
 the slice topology); the mesh flags select the production layout.
+
+The step runs under the async runtime by default (prefetched batches,
+deferred metric sync, background checkpoints — ``repro.train.runtime``);
+``--runtime sync`` selects the reference loop. Either way the step is
+jitted WITH the shardings ``build_train_step`` derives, so compressor
+error feedback shards over (dp, model) instead of replicating.
 """
 import os
 if os.environ.get("REPRO_DEVICES"):
@@ -17,16 +23,19 @@ import argparse
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.checkpoint.io import peek_step, restore as ckpt_restore
 from repro.configs import get_config, list_archs
 from repro.core import CompressorConfig
 from repro.data.synthetic import LMDataConfig, lm_batch
 from repro.launch.mesh import make_mesh, make_production_mesh, use_mesh
-from repro.models.multimodal import conditioning_stub
 from repro.train.optimizer import make_optimizer
-from repro.train.step import (build_train_step, init_train_state,
-                              make_model_compressor, n_dp_of)
-from repro.train.trainer import Trainer, TrainerConfig
+from repro.train.runtime import (AsyncRunner, RuntimeConfig,
+                                 build_sharded_step, run_schedule,
+                                 sharded_init)
+from repro.train.step import make_model_compressor
+from repro.train.trainer import Trainer
 
 
 def main() -> None:
@@ -65,9 +74,23 @@ def main() -> None:
                     help="e.g. '4x2' (data x model); default: all devices on data")
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--runtime", default="async", choices=["async", "sync"],
+                    help="async: prefetch + deferred metric sync + "
+                         "background checkpoints (repro.train.runtime); "
+                         "sync: the reference loop")
+    ap.add_argument("--microbatch", type=int, default=1,
+                    help="gradient accumulation: split each step's batch "
+                         "into k sequential microbatches; the compressed "
+                         "sync fires once per accumulated step")
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="async runtime: device batches kept in flight")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--ckpt-path", default="checkpoints/state.ckpt")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore from --ckpt-path and continue; schedule "
+                         "phases already completed are skipped (their "
+                         "warm-Q truncations are not re-applied)")
     args = ap.parse_args()
 
     if args.production_mesh:
@@ -95,8 +118,6 @@ def main() -> None:
         from repro.core.policy import format_plan_report
         print(format_plan_report(compressor.plan_report))
     optimizer = make_optimizer(args.optimizer, args.lr)
-    step_fn, state_sh, batch_sh = build_train_step(
-        cfg, mesh, compressor, optimizer, remat_scan=not args.smoke)
 
     data_cfg = LMDataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
                             batch=args.batch, n_codebooks=cfg.n_codebooks)
@@ -104,45 +125,73 @@ def main() -> None:
     def batch_fn(step: int):
         b = lm_batch(data_cfg, step)
         if cfg.cond_len:
-            b["cond"] = conditioning_stub(jax.random.PRNGKey(step), args.batch, cfg)
+            # pure numpy (matches conditioning_stub's distribution): this
+            # runs on the async runtime's prefetch thread, where eager jax
+            # ops contend with the main thread on the dispatch locks — the
+            # same reason lm_batch itself is numpy
+            rng = np.random.default_rng(
+                np.random.SeedSequence([data_cfg.seed, step, 1]))
+            b["cond"] = (rng.standard_normal(
+                (args.batch, cfg.cond_len, cfg.d_model)) * 0.02
+                ).astype(jnp.dtype(cfg.dtype))
         return b
 
     with use_mesh(mesh):
-        state = init_train_state(cfg, jax.random.PRNGKey(0), optimizer,
-                                 compressor, n_dp_of(mesh))
-        jstep = jax.jit(step_fn, donate_argnums=0)
+        def build(comp):
+            return build_sharded_step(cfg, mesh, comp, optimizer,
+                                      sample_batch=batch_fn(0),
+                                      microbatch=args.microbatch,
+                                      remat_scan=not args.smoke)
+
+        comp0 = compressor
+        if args.resume:
+            if not os.path.exists(args.ckpt_path):
+                raise FileNotFoundError(
+                    f"--resume: no checkpoint at {args.ckpt_path!r} — "
+                    "refusing to silently restart from scratch")
+            # the checkpoint's q columns reflect the schedule phase that
+            # PRODUCED the saved state — the phase of the last executed
+            # step, step0-1, not step0: a save landing exactly on a decay
+            # boundary holds the pre-boundary (un-truncated) q, and
+            # run_schedule applies the boundary's adapt_state when it
+            # enters the next phase
+            step0 = peek_step(args.ckpt_path)
+            if hasattr(compressor, "at_step"):
+                comp0 = compressor.at_step(max(step0 - 1, 0))
+            jstep, st_sh, _, state_abs = build(comp0)
+            state = ckpt_restore(args.ckpt_path, state_abs, st_sh)
+            print(f"# resumed at step {step0} from {args.ckpt_path}")
+        else:
+            jstep, st_sh, _, state_abs = build(comp0)
+            state = sharded_init(cfg, jax.random.PRNGKey(0), optimizer,
+                                 comp0, mesh, st_sh)
         print(f"arch={cfg.name} params={sum(x.size for x in jax.tree.leaves(state['params']))/1e6:.1f}M "
               f"mesh={dict(mesh.shape)} compressor={args.compressor} "
               f"policy={comp_cfg.policy or 'uniform'} "
-              f"wire/step={compressor.wire_bits_per_step()/8e6:.3f}MB "
+              f"runtime={args.runtime} microbatch={args.microbatch} "
+              f"wire/step={comp0.wire_bits_per_step()/8e6:.3f}MB "
               f"(uncompressed={sum(x.size for x in jax.tree.leaves(state['params']))*4/1e6:.1f}MB)")
-        tc = lambda steps: TrainerConfig(steps=steps,
-                                         log_every=args.log_every,
-                                         ckpt_every=args.ckpt_every,
-                                         ckpt_path=args.ckpt_path)
-        bounds = ([b for b in compressor.schedule.boundaries()
-                   if 0 < b < args.steps]
-                  if (decay or args.warmup) else [])
-        if not bounds:
-            Trainer(jstep, batch_fn, tc(args.steps)).run(state)
+        rcfg = RuntimeConfig(steps=args.steps, log_every=args.log_every,
+                             ckpt_every=args.ckpt_every,
+                             ckpt_path=args.ckpt_path,
+                             microbatch=args.microbatch,
+                             prefetch=args.prefetch)
+        if args.runtime == "async":
+            runner = AsyncRunner(jstep, batch_fn, rcfg)
         else:
-            # schedule phases (rank/bit decay caps + the end of warm-up):
-            # rebuild the traced step at each boundary; Trainer resumes
-            # from state['step'], so each phase trains until its end step
-            comp_prev = compressor
-            for seg_start, seg_end in zip([0] + bounds,
-                                          bounds + [args.steps]):
-                comp_t = compressor.at_step(seg_start)
-                if comp_t is not comp_prev:
-                    state["comp"] = comp_t.adapt_state(state["comp"])
-                    step_fn, _, _ = build_train_step(
-                        cfg, mesh, comp_t, optimizer,
-                        remat_scan=not args.smoke)
-                    jstep = jax.jit(step_fn, donate_argnums=0)
-                    print(f"# schedule phase @step {seg_start}: "
-                          f"wire/step={comp_t.wire_bits_per_step()/8e6:.3f}MB")
-                    comp_prev = comp_t
-                state = Trainer(jstep, batch_fn, tc(seg_end)).run(state)
+            runner = Trainer(jstep, batch_fn, rcfg)
+
+        def rebuild(comp_t, seg_start):
+            js, sh, _, _ = build(comp_t)
+            print(f"# schedule phase @step {seg_start}: "
+                  f"wire/step={comp_t.wire_bits_per_step()/8e6:.3f}MB")
+            return js, sh
+
+        # ONE runner threads through every schedule phase (history and
+        # wall-clock survive boundaries); completed phases are skipped on
+        # resume — see repro.train.runtime.run_schedule
+        run_schedule(runner, compressor, state, total_steps=args.steps,
+                     rebuild=rebuild, initial=comp0)
 
 
 if __name__ == "__main__":

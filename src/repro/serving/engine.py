@@ -27,7 +27,7 @@ from repro.launch.sharding import param_specs
 from repro.models.model import forward, init_caches, init_params, stacked_flags
 
 __all__ = ["cache_specs", "build_prefill_step", "build_decode_step",
-           "serve_shardings", "greedy_sample"]
+           "serve_shardings", "greedy_sample", "temperature_sample"]
 
 
 def _dp_axes(mesh: Mesh) -> tuple[str, ...]:

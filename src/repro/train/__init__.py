@@ -1,1 +1,2 @@
-"""train subsystem."""
+"""train subsystem: the shard_map'd compressed step (`step`), the reference
+synchronous loop (`trainer`), and the async production runtime (`runtime`)."""

@@ -1,4 +1,18 @@
-"""Training loop: metrics, checkpointing, deterministic data order."""
+"""Synchronous training loop: metrics, checkpointing, deterministic data
+order.
+
+This is the *reference* loop: every piece of host work (batch build, metric
+``float()`` sync, checkpoint ``device_get`` + serialization) runs on the
+hot path, blocking device dispatch. The production runtime in
+:mod:`repro.train.runtime` overlaps all of it (bit-for-bit equal,
+regression-tested); this loop stays as the equivalence baseline and the
+``--runtime sync`` row of ``benchmarks/step_time.py``.
+
+One ``Trainer`` instance may drive several ``run()`` calls (the schedule
+phase loop swaps ``step_fn`` between them): ``history`` accumulates and
+``wall_s`` keeps counting from the FIRST run, so a rank/bit decay boundary
+no longer resets the logged trajectory.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -18,6 +32,7 @@ class TrainerConfig:
     log_every: int = 10
     ckpt_every: int = 0          # 0 = disabled
     ckpt_path: str = "checkpoints/state.ckpt"
+    verbose: bool = True         # False: record history, print nothing
 
 
 class Trainer:
@@ -29,6 +44,11 @@ class Trainer:
         self.batch_fn = batch_fn
         self.cfg = cfg
         self.history: list[dict[str, float]] = []
+        # main-thread seconds blocked on host work (batch build + metric
+        # sync + checkpoint IO) — the quantity the async runtime shrinks;
+        # benchmarks/step_time.py reports it as host_blocked_fraction
+        self.host_s = 0.0
+        self._t0: float | None = None
 
     def run(self, state: Any, start_step: int | None = None) -> Any:
         """``start_step=None`` resumes from ``state["step"]`` when present
@@ -38,24 +58,32 @@ class Trainer:
             start_step = (int(jax.device_get(state["step"]))
                           if isinstance(state, dict) and "step" in state
                           else 0)
-        t0 = time.time()
+        if self._t0 is None:
+            self._t0 = time.time()
         for step in range(start_step, self.cfg.steps):
+            th = time.time()
             batch = self.batch_fn(step)
+            self.host_s += time.time() - th
             state, metrics = self.step_fn(state, batch)
             if (step % self.cfg.log_every == 0
                     or step == self.cfg.steps - 1):
+                th = time.time()
                 m = {k: float(v) for k, v in metrics.items()}
                 m["step"] = step
-                m["wall_s"] = round(time.time() - t0, 2)
+                m["wall_s"] = round(time.time() - self._t0, 2)
                 self.history.append(m)
-                msg = " ".join(f"{k}={v:.4f}" for k, v in m.items()
-                               if k not in ("step", "wall_s"))
-                print(f"step {step:5d} | {msg} | t={m['wall_s']}s")
+                if self.cfg.verbose:
+                    msg = " ".join(f"{k}={v:.4f}" for k, v in m.items()
+                                   if k not in ("step", "wall_s"))
+                    print(f"step {step:5d} | {msg} | t={m['wall_s']}s")
+                self.host_s += time.time() - th
             # save on the interval AND at the final step — a run whose last
             # step is off the interval grid must still leave a checkpoint
             if self.cfg.ckpt_every and (
                     step == self.cfg.steps - 1
                     or (step and step % self.cfg.ckpt_every == 0)):
+                th = time.time()
                 host_state = jax.tree.map(lambda x: jax.device_get(x), state)
                 ckpt_save(self.cfg.ckpt_path, host_state)
+                self.host_s += time.time() - th
         return state

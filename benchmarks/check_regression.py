@@ -1,0 +1,178 @@
+"""Bench-regression gate: compare freshly generated BENCH_*.json against
+the committed snapshots and fail CI on hard regressions.
+
+    # CI: stash the committed snapshots, regenerate, then gate
+    mkdir .bench_baseline && cp BENCH_*.json .bench_baseline/
+    PYTHONPATH=src python -m benchmarks.run --quick --json
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --baseline .bench_baseline
+
+Two kinds of checks:
+
+* **Hard** (exit 1): metrics that are deterministic static accounting —
+  wire bytes and collective counts. These are identical run-to-run and
+  machine-to-machine, so ANY growth beyond the (tiny) tolerance band is a
+  real regression: ``mb_per_epoch`` (the paper tables), the policy
+  sweep's ``wire_bits_per_step``, and the lazy sweep's eager-row
+  accounting. The lazy-aggregation acceptance invariant is also hard,
+  and needs no baseline: the fresh ``lazy_sweep.gate.passed`` must be
+  true (some threshold reaches collectives/step < 0.5x eager at the
+  eager accuracy).
+* **Warn** (printed, never fail): wall-clock and learning metrics —
+  ``us_per_step``, steps/sec, accuracy, SSIM. 2-core CI runners are
+  noisy and ``--quick`` runs fewer steps, so these are trajectory
+  signals, not gates.
+
+Metrics are matched by dotted path; a metric present in only one side
+(new benchmark row, trimmed --quick sweep) is reported and skipped.
+
+This file is ruff-format-clean and on the formatter adoption list in
+.github/workflows/ci.yml (contract documented in pyproject.toml).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+CC = "BENCH_comm_cost.json"
+
+# (file, dotted-path prefix, lower_is_better, relative tolerance, hard)
+RULES = [
+    (CC, "mb_per_epoch.", True, 0.01, True),
+    (CC, "policy_sweep.results.", True, 0.01, True),
+    (CC, "policy_sweep.uniform_best_wire_bits", True, 0.01, True),
+    (CC, "lazy_sweep.results.eager.", True, 0.01, True),
+    (CC, "lazy_sweep.results.lazy_", True, 0.35, False),
+    ("BENCH_step_time.json", "", True, 0.50, False),
+    ("BENCH_convergence.json", "", True, 0.50, False),
+    ("BENCH_privacy.json", "", True, 0.50, False),
+    ("BENCH_quant_kernel.json", "", True, 0.50, False),
+]
+
+# numeric leaves under a hard prefix that are NOT accounting — never gate
+SOFT_KEYS = [
+    "us_per_step",
+    "acc",
+    "loss",
+    "wall",
+    "secs",
+    "ssim",
+    "psnr",
+    "steps",
+    "schema",
+    "fire_rate",
+]
+
+# metrics where a DROP (not growth) is the bad direction, overriding the
+# rule's lower_is_better: quality scores and throughput rates
+HIGHER_BETTER_KEYS = [
+    "acc",
+    "ssim",
+    "psnr",
+    "per_sec",
+    "speedup",
+]
+
+
+def _flatten(obj, prefix=""):
+    """Numeric leaves by dotted path; list entries are keyed by their
+    name/policy/method field when present (stable across reorderings)."""
+    out = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(_flatten(v, f"{prefix}{k}."))
+    elif isinstance(obj, list):
+        for j, v in enumerate(obj):
+            key = j
+            if isinstance(v, dict):
+                key = v.get("name") or v.get("policy") or v.get("method") or j
+            out.update(_flatten(v, f"{prefix}{key}."))
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        out[prefix.rstrip(".")] = float(obj)
+    return out
+
+
+def _load(path):
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def check_lazy_gate(fresh_dir):
+    """The self-contained acceptance invariant (no baseline needed)."""
+    payload = _load(os.path.join(fresh_dir, CC))
+    if payload is None:
+        return [f"HARD: {CC} missing from fresh results"]
+    gate = payload.get("lazy_sweep", {}).get("gate")
+    if gate is None:
+        hint = "run `benchmarks.run --only lazy_sweep --json`"
+        return [f"HARD: lazy_sweep.gate missing from {CC} ({hint})"]
+    if not gate.get("passed"):
+        what = "no threshold reached collectives/step < 0.5x eager at equal accuracy"
+        return [f"HARD: lazy-aggregation gate failed: {what} ({gate})"]
+    return []
+
+
+def compare(baseline_dir, fresh_dir):
+    """Returns (hard_failures, warnings)."""
+    hard, warn = [], []
+    for fname, prefix, lower_better, tol, is_hard in RULES:
+        base = _load(os.path.join(baseline_dir, fname))
+        fresh = _load(os.path.join(fresh_dir, fname))
+        if base is None or fresh is None:
+            side = "baseline" if base is None else "fresh"
+            warn.append(f"WARN: {fname}: no {side} copy — skipping '{prefix}*'")
+            continue
+        b_flat, f_flat = _flatten(base), _flatten(fresh)
+        for path, bval in sorted(b_flat.items()):
+            if not path.startswith(prefix):
+                continue
+            gate = is_hard and not any(s in path for s in SOFT_KEYS)
+            if path not in f_flat:
+                warn.append(f"WARN: {fname}:{path} missing from fresh run")
+                continue
+            fval = f_flat[path]
+            if bval == 0:
+                continue
+            lb = lower_better and not any(h in path for h in HIGHER_BETTER_KEYS)
+            delta = (fval - bval) / abs(bval)
+            bad = delta if lb else -delta
+            if bad <= tol:
+                continue
+            direction = "grew" if lb else "dropped"
+            change = f"{abs(delta) * 100:.1f}% ({bval:.6g} -> {fval:.6g}"
+            msg = f"{fname}:{path} {direction} {change}, tol {tol * 100:.0f}%)"
+            (hard if gate else warn).append(("HARD: " if gate else "WARN: ") + msg)
+    return hard, warn
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    base_help = "directory holding the committed BENCH_*.json snapshots"
+    ap.add_argument("--baseline", default=".bench_baseline", help=base_help)
+    fresh_help = "directory holding the freshly generated files"
+    ap.add_argument("--fresh", default=".", help=fresh_help)
+    args = ap.parse_args()
+
+    hard = check_lazy_gate(args.fresh)
+    warn = []
+    if not os.path.isdir(args.baseline):
+        note = f"warning: baseline dir {args.baseline!r} missing"
+        print(f"{note} — running self-invariants only", file=sys.stderr)
+    else:
+        h, warn = compare(args.baseline, args.fresh)
+        hard.extend(h)
+    for line in warn:
+        print(line)
+    for line in hard:
+        print(line)
+    if hard:
+        print(f"\nbench-regression gate: {len(hard)} hard failure(s)")
+        sys.exit(1)
+    print(f"bench-regression gate: OK ({len(warn)} warning(s))")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,7 +10,11 @@ paper's steps-per-epoch (5 workers x batch 128 -> 79 steps on 50k images,
 ``--check`` runs the codec-layer smoke invariants instead of the table:
 fused collective counts (2 + n_raw per step for PowerSGD AND LQ-SGD) and
 packed-wire accounting (b=4 gathered bytes == wire_bits_per_step), by
-actually executing sync under N-worker vmap collective semantics.
+actually executing sync under N-worker vmap collective semantics — plus
+the lazy-aggregation accounting invariants (repro.core.lazy): a fired
+round's EFFECTIVE wire equals ``wire_bits_per_step()`` (payload + 64-bit
+decision sideband per lazy leaf) and a skipped round charges exactly the
+sideband with ONE collective.
 """
 from __future__ import annotations
 
@@ -141,7 +145,53 @@ def check() -> list[tuple[str, float, str]]:
             f"accounting {comp.wire_bits_per_step()}")
         out.append((f"comm_check/{tag}/wire_bytes", rec.bits_sent / 8,
                     "actual gathered-array bytes == wire_bits_per_step()"))
+    out.extend(check_lazy(grads, abstract, stacked, n_workers))
     return out
+
+
+def check_lazy(grads, abstract, stacked, n_workers
+               ) -> list[tuple[str, float, str]]:
+    """Lazy-aggregation accounting invariants, executed for real: with a
+    never-voting threshold and ``max_stale=2`` the fire pattern is forced
+    (fire, skip, skip, fire, ...), so each step's effective accounting is
+    exactly predictable."""
+    import jax.numpy as jnp
+
+    cfg = CompressorConfig(name="lq_sgd", rank=2, bits=8,
+                           fuse_collectives=True,
+                           lazy_thresh=1e6, max_stale=2)
+    comp = make_compressor(cfg, abstract, stacked)
+    state = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_workers,) + x.shape),
+        comp.init_state(jax.random.PRNGKey(42)))
+
+    def worker(g, st):
+        o, st2, rec = comp.sync(g, st, AxisComm(("data",)))
+        return (st2, jnp.asarray(rec.effective_bits(), jnp.float32),
+                jnp.asarray(rec.effective_collectives(), jnp.float32))
+
+    wf = jax.jit(jax.vmap(worker, axis_name="data"))
+    hist = []
+    for _ in range(4):
+        state, eb, ec = wf(grads, state)
+        hist.append((float(eb[0]), float(ec[0])))
+    fired = comp.wire_bits_per_step()
+    sideband = comp.decision_bits_per_step()
+    n_lazy = sum(len(v) for v in comp.lazy_groups.values())
+    assert sideband == 64 * n_lazy, (sideband, n_lazy)
+    want = [(fired, None), (sideband, 1.0), (sideband, 1.0), (fired, None)]
+    for step, ((bits, colls), (wbits, wcolls)) in enumerate(zip(hist, want)):
+        assert bits == wbits, (
+            f"lazy step {step}: effective bits {bits} != {wbits}")
+        if wcolls is not None:
+            assert colls == wcolls, (
+                f"lazy step {step}: {colls} collectives on a skip != 1")
+    return [
+        ("comm_check/lazy/fired_bits", fired,
+         "fired round effective bits == wire_bits_per_step()"),
+        ("comm_check/lazy/skip_bits", sideband,
+         "skipped round charges only the 64-bit/leaf decision sideband"),
+    ]
 
 
 if __name__ == "__main__":

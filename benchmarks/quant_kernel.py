@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.codec import LogQuantCodec, pack_nibbles
-from repro.kernels import ops, ref
+from repro.kernels import ref
 from repro.kernels.log_quant import log_quantize_pallas, pack_nibbles_pallas
 
 

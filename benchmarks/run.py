@@ -6,6 +6,11 @@ Prints ``name,us_per_call,derived`` CSV (scaffold contract):
   * comm_cost     -> paper Tables I-III 'Size' column (exact wire accounting)
   * policy_sweep  -> per-leaf policies: uniform vs mixed vs auto wire +
                      convergence proxy (merged into BENCH_comm_cost.json)
+  * lazy_sweep    -> skip-round lazy aggregation: threshold sweep of
+                     collectives/step, effective wire bytes + convergence
+                     proxy (merged into BENCH_comm_cost.json; carries the
+                     CI gate invariant benchmarks/check_regression.py
+                     hard-fails on)
   * convergence   -> paper Figs. 1-3 / accuracy+time columns (reduced scale)
   * gia_ssim      -> paper Fig. 5 (SSIM/PSNR under gradient inversion,
                      cold-start AND steady-state attack points)
@@ -38,25 +43,33 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="fewer steps (CI-speed)")
-    ap.add_argument("--only", default=None,
-                    choices=["comm_cost", "policy_sweep", "convergence",
-                             "gia_ssim", "quant_kernel", "step_time"])
+    ap.add_argument("--only", default=None, metavar="SECTION",
+                    help="run a single section (see the module docstring)")
     ap.add_argument("--json", action="store_true",
                     help="also write each section's BENCH_*.json")
     args = ap.parse_args()
 
-    from benchmarks import (comm_cost, convergence, gia_ssim, policy_sweep,
-                            quant_kernel, step_time)
+    from benchmarks import (comm_cost, convergence, gia_ssim, lazy_sweep,
+                            policy_sweep, quant_kernel, step_time)
 
-    # policy_sweep AFTER comm_cost: it merges into BENCH_comm_cost.json
+    # policy_sweep/lazy_sweep AFTER comm_cost: they merge into
+    # BENCH_comm_cost.json
     sections = {
         "comm_cost": comm_cost,
         "policy_sweep": policy_sweep,
+        "lazy_sweep": lazy_sweep,
         "quant_kernel": quant_kernel,
         "step_time": step_time,
         "convergence": convergence,
         "gia_ssim": gia_ssim,
     }
+    # the registry is the single source of truth for --only: an unknown
+    # name must exit non-zero (a hardcoded choices list once let a new
+    # section name typo'd in CI run zero sections and stay green)
+    if args.only and args.only not in sections:
+        print(f"error: unknown --only section {args.only!r}; "
+              f"options: {', '.join(sections)}", file=sys.stderr)
+        sys.exit(2)
     # BENCH_KEYs other sections merge into each file — the file's owner
     # must carry these over on rewrite, or regenerating it alone (--only)
     # would silently drop a sibling's merged payload

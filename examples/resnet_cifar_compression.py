@@ -10,8 +10,6 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."
 
 import argparse
 
-import jax
-
 from benchmarks.comm_cost import comm_table
 from benchmarks.convergence import train_one
 from repro.core import CompressorConfig

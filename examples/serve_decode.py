@@ -16,7 +16,7 @@ from repro.configs import get_config
 from repro.launch.mesh import make_mesh, use_mesh
 from repro.models.model import init_params
 from repro.serving.engine import (build_decode_step, build_prefill_step,
-                                  greedy_sample, serve_shardings)
+                                  greedy_sample)
 
 
 def main():

@@ -14,9 +14,8 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
-from repro.checkpoint.io import restore, save
+from repro.checkpoint.io import restore
 from repro.configs.base import ModelConfig, attn
 from repro.core import CompressorConfig
 from repro.data.synthetic import LMDataConfig, lm_batch

@@ -9,6 +9,7 @@ from repro.core.codec import (
 )
 from repro.core.comm import AxisComm, CommRecord
 from repro.core.composite import CompositeCompressor, PolicySchedule
+from repro.core.lazy import LazyDecision, p_fire
 from repro.core.compressors import (
     CompressorConfig,
     GradCompressor,
@@ -35,8 +36,10 @@ __all__ = [
     "CompositeCompressor",
     "CompressorConfig",
     "GradCompressor",
+    "LazyDecision",
     "LeafPlan",
     "LeafPolicy",
+    "p_fire",
     "NoCompression",
     "PolicySchedule",
     "QSGDCompressor",

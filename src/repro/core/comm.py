@@ -49,18 +49,42 @@ def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
 
 @dataclasses.dataclass
 class CommRecord:
-    """Accumulated wire accounting for one sync call (per worker, bits)."""
+    """Accumulated wire accounting for one sync call (per worker, bits).
 
-    bits_sent: int = 0  # payload each worker puts on the wire
+    Two tiers:
+
+    * ``add`` — *static* accounting (plain Python ints, known at trace
+      time): the eager compressors only use this, so tables and benchmarks
+      never need device work.
+    * ``add_gated`` — *dynamic* accounting for lazily-aggregated groups
+      (:mod:`repro.core.lazy`): the payload fires only when the traced
+      ``gate`` is true, so the charged bits/collectives are jnp scalars.
+      ``effective_bits``/``effective_collectives`` fold both tiers; on an
+      eager-only record they stay plain ints (nothing traced escapes).
+    """
+
+    bits_sent: int = 0  # payload each worker puts on the wire (static)
     n_collectives: int = 0
+    dyn_bits: object = 0          # gate-weighted payload (jnp scalar or 0)
+    dyn_collectives: object = 0
 
     def add(self, bits: int, n: int = 1) -> None:
         self.bits_sent += int(bits)
         self.n_collectives += n
 
-    @property
-    def megabytes(self) -> float:
-        return self.bits_sent / 8.0 / 1e6
+    def add_gated(self, bits: int, n: int, gate) -> None:
+        """Charge ``bits``/``n`` only when the traced ``gate`` fires."""
+        g = jnp.asarray(gate, jnp.float32)
+        self.dyn_bits = self.dyn_bits + g * bits
+        self.dyn_collectives = self.dyn_collectives + g * n
+
+    def effective_bits(self):
+        """Static + gate-weighted payload bits (int, or jnp scalar when a
+        lazy group charged dynamically this sync)."""
+        return self.bits_sent + self.dyn_bits
+
+    def effective_collectives(self):
+        return self.n_collectives + self.dyn_collectives
 
 
 class AxisComm:

@@ -36,6 +36,17 @@ Schedules (:class:`PolicySchedule`):
   composite for the phase containing ``t`` and ``adapt_state`` carries the
   threaded state across (error feedback kept, warm Q column-truncated).
   ``launch/train.py`` drives the per-phase loop.
+
+Lazy aggregation (:mod:`repro.core.lazy`): leaves whose policy sets
+``lazy_thresh > 0`` form each method group's *lazy subset* — one in-graph
+LAQ-style skip decision per subset per step. On a skip the subset
+contributes its cached aggregate (``lazy_out``) instead of fresh
+collectives and no compressor state advances (LAQ-faithful — see
+``_sync_lazy_group``); a ``max_stale`` cap forces a fire so no group
+silently freezes. Eager leaves of the same method sync in their own
+(fused) phase set every step. ``lazy_thresh = 0`` builds none of the
+machinery — the composite is bit-for-bit the eager one
+(regression-tested, all four methods, fused and unfused).
 """
 from __future__ import annotations
 
@@ -45,6 +56,7 @@ from typing import Any, Callable, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core import lazy as lazy_mod
 from repro.core.comm import AxisComm, CommRecord
 from repro.core.compressors import (CompressorConfig, GradCompressor,
                                     LeafGroupHandler, LeafPolicy,
@@ -140,6 +152,11 @@ class CompositeCompressor(GradCompressor):
         for i, pl in enumerate(self.plans):
             self.groups.setdefault(pl.policy.method, []).append(i)
         self.handlers = {m: handler_for(m, cfg) for m in self.groups}
+        # per-group lazy subsets (policy opt-in; empty == fully eager)
+        self.lazy_groups = {
+            m: lz for m, idxs in self.groups.items()
+            if (lz := lazy_mod.lazy_subset(self.plans, idxs))
+        }
 
     # ---- state -----------------------------------------------------------
     def init_state(self, key: jax.Array) -> PyTree:
@@ -154,7 +171,26 @@ class CompositeCompressor(GradCompressor):
             for i in idxs:
                 for ns, v in h.init_leaf_state(key, i, self.plans[i]).items():
                     state[ns][str(i)] = v
+        # ---- lazy-aggregation state (repro.core.lazy) --------------------
+        sd = jnp.dtype(self.cfg.state_dtype)
+        for m, lz in self.lazy_groups.items():
+            for ns in (lazy_mod.OUT_NS, lazy_mod.REF_NS, lazy_mod.STALE_NS):
+                state.setdefault(ns, {})
+            for i in lz:
+                shape = self.plans[i].shape
+                state[lazy_mod.OUT_NS][str(i)] = jnp.zeros(shape, sd)
+                state[lazy_mod.REF_NS][str(i)] = jnp.zeros(shape, sd)
+            # the counter starts AT the cap: round 0 always fires, so the
+            # cached aggregate is never consumed before it exists
+            state[lazy_mod.STALE_NS][m] = jnp.asarray(
+                lazy_mod.group_max_stale(self.plans, lz), jnp.int32)
         return state
+
+    def _has_err(self, i: int, state: PyTree) -> bool:
+        """Does leaf ``i`` carry handler error feedback? (Its innovation
+        variable is then the error-corrected update ``g + err``.)"""
+        h = self.handlers[self.plans[i].policy.method]
+        return "err" in h.namespaces and str(i) in state.get("err", {})
 
     def _param_shaped_namespaces(self) -> tuple[str, ...]:
         out: list[str] = []
@@ -162,6 +198,8 @@ class CompositeCompressor(GradCompressor):
             for ns in h.param_shaped:
                 if ns not in out:
                     out.append(ns)
+        if self.lazy_groups:
+            out.extend(lazy_mod.PARAM_SHAPED_NS)
         return tuple(out)
 
     # ---- the sync op -----------------------------------------------------
@@ -178,15 +216,25 @@ class CompositeCompressor(GradCompressor):
         leaves = jax.tree_util.tree_flatten(grads)[0]
         outs: dict[int, jax.Array] = {}
         updates: dict[str, dict] = {}
+        warm = (state["step"] < self.schedule.warmup_steps
+                if self.schedule.warmup_steps > 0 else None)
         for m, idxs in self.groups.items():
-            items = [(i, leaves[i], self.plans[i]) for i in idxs]
-            o, upd = self.handlers[m].sync_group(items, state, comm, rec)
-            outs.update(o)
-            for ns, sub in upd.items():
-                updates.setdefault(ns, {}).update(sub)
+            lz = set(self.lazy_groups.get(m, ()))
+            eager = [i for i in idxs if i not in lz]
+            if eager:
+                items = [(i, leaves[i], self.plans[i]) for i in eager]
+                o, upd = self.handlers[m].sync_group(items, state, comm, rec)
+                outs.update(o)
+                for ns, sub in upd.items():
+                    updates.setdefault(ns, {}).update(sub)
+            if lz:
+                o, upd = self._sync_lazy_group(
+                    m, self.lazy_groups[m], leaves, state, comm, rec, warm)
+                outs.update(o)
+                for ns, sub in upd.items():
+                    updates.setdefault(ns, {}).update(sub)
         # ---- schedule: in-graph full-precision warm-up -------------------
         if self.schedule.warmup_steps > 0:
-            warm = state["step"] < self.schedule.warmup_steps
             for i, pl in enumerate(self.plans):
                 if not self._lossy(pl):
                     continue
@@ -204,10 +252,104 @@ class CompositeCompressor(GradCompressor):
         return (jax.tree_util.tree_unflatten(self.treedef, out),
                 new_state, rec)
 
+    def _sync_lazy_group(self, m: str, idxs: list[int], leaves, state,
+                         comm: AxisComm, rec: CommRecord, warm
+                         ) -> tuple[dict[int, jax.Array], dict]:
+        """One method group's lazy subset: collective skip decision, gated
+        handler sync, cached-aggregate selection (module docstring and
+        :mod:`repro.core.lazy` carry the full semantics).
+
+        LAQ-faithful skip: the round's gradient is neither applied nor
+        banked — every worker reuses the cached aggregate and NO state
+        advances except ``lazy_stale`` (banking skipped gradients into the
+        error feedback double-counts the update, because the cached
+        aggregate keeps moving the parameters while the bank replays the
+        same motion on the next fire — measurably divergent at high
+        staleness). The innovation the skip forfeits is bounded by the
+        threshold; a fired round's compression residual still carries
+        through ``err`` exactly as in the eager path.
+        """
+        sd = jnp.dtype(self.cfg.state_dtype)
+        h = self.handlers[m]
+        xs, items = [], []
+        for i in idxs:
+            g = leaves[i]
+            # the innovation variable is the update compression would see:
+            # error-corrected for EF leaves, the raw gradient otherwise
+            x = g.astype(jnp.float32)
+            if self._has_err(i, state):
+                x = x + state["err"][str(i)].astype(jnp.float32)
+            xs.append(x)
+            items.append((i, g, self.plans[i]))
+        dec = lazy_mod.group_decision(
+            xs, [state[lazy_mod.REF_NS][str(i)] for i in idxs],
+            [self.plans[i].policy.lazy_thresh for i in idxs],
+            state[lazy_mod.STALE_NS][m],
+            lazy_mod.group_max_stale(self.plans, idxs),
+            comm, rec, force=warm)
+        sub = CommRecord()
+        o, upd = h.sync_group(items, state, comm, sub)
+        rec.add_gated(sub.bits_sent, sub.n_collectives, dec.fire)
+        # handler state (error feedback, warm Q, ...) advances only on a
+        # fired round — a skip leaves the group's state untouched
+        for ns, subd in upd.items():
+            for k in list(subd):
+                if k in state.get(ns, {}):
+                    subd[k] = dec.select(subd[k], state[ns][k])
+        outs: dict[int, jax.Array] = {}
+        new_out, new_ref = {}, {}
+        for i, x in zip(idxs, xs):
+            k = str(i)
+            fresh = o[i].astype(jnp.float32)
+            sel = dec.select(fresh, state[lazy_mod.OUT_NS][k]
+                             .astype(jnp.float32))
+            outs[i] = sel.astype(leaves[i].dtype)
+            new_out[k] = sel.astype(sd)
+            new_ref[k] = dec.select(
+                x, state[lazy_mod.REF_NS][k].astype(jnp.float32)).astype(sd)
+        upd[lazy_mod.OUT_NS] = new_out
+        upd[lazy_mod.REF_NS] = new_ref
+        upd[lazy_mod.STALE_NS] = {m: dec.new_stale}
+        return outs, upd
+
     # ---- static accounting -----------------------------------------------
+    def decision_bits_per_step(self) -> int:
+        """Skip-decision sideband (fires every round): one fused psum of
+        innovation + norm scalars per lazy group."""
+        return sum(lazy_mod.DECISION_BITS_PER_LEAF * len(lz)
+                   for lz in self.lazy_groups.values())
+
     def wire_bits_per_step(self) -> int:
-        return sum(self.handlers[pl.policy.method].leaf_wire_bits(pl)
-                   for pl in self.plans)
+        """Wire bits of a round where every group fires (the eager figure
+        plus the lazy decision sideband). A lazy run's per-step average is
+        ``expected_wire_bits_per_step`` / the CommRecord's dynamic tier."""
+        return (sum(self.handlers[pl.policy.method].leaf_wire_bits(pl)
+                    for pl in self.plans)
+                + self.decision_bits_per_step())
+
+    def group_p_fire(self, m: str, innovation_rate: float = 0.25) -> float:
+        """Static fire-probability proxy for method group ``m``'s lazy
+        subset (1.0 when it has none). The group fires when ANY member
+        votes, so the tightest member threshold dominates."""
+        lz = self.lazy_groups.get(m)
+        if not lz:
+            return 1.0
+        thresh = min(self.plans[i].policy.lazy_thresh for i in lz)
+        return lazy_mod.p_fire(thresh, lazy_mod.group_max_stale(self.plans, lz),
+                               innovation_rate)
+
+    def expected_wire_bits_per_step(self, innovation_rate: float = 0.25
+                                    ) -> float:
+        """Planner-model expectation: eager leaves at full weight, each
+        lazy subset at its ``p_fire``, plus the always-on decision
+        sideband."""
+        total = float(self.decision_bits_per_step())
+        for i, pl in enumerate(self.plans):
+            m = pl.policy.method
+            p = (self.group_p_fire(m, innovation_rate)
+                 if i in self.lazy_groups.get(m, ()) else 1.0)
+            total += p * self.handlers[m].leaf_wire_bits(pl)
+        return total
 
     def warmup_extra_bits(self) -> int:
         """fp32 shadow all-reduce traffic added per step by a graph traced
@@ -220,11 +362,15 @@ class CompositeCompressor(GradCompressor):
                    if self._lossy(pl))
 
     def wire_bits_by_method(self) -> dict[str, int]:
-        """Static wire accounting split per policy method (planner tables)."""
+        """Static wire accounting split per policy method (planner tables);
+        a lazy group's decision sideband is charged to its method, so the
+        split still sums to ``wire_bits_per_step``."""
         out: dict[str, int] = {}
         for pl in self.plans:
             m = pl.policy.method
             out[m] = out.get(m, 0) + self.handlers[m].leaf_wire_bits(pl)
+        for m, lz in self.lazy_groups.items():
+            out[m] = out.get(m, 0) + lazy_mod.DECISION_BITS_PER_LEAF * len(lz)
         return out
 
     # ---- decay phases ----------------------------------------------------

@@ -106,6 +106,15 @@ class CompressorConfig:
     # schedule: piecewise-constant decay caps ((start_step, rank_cap|None,
     # bits_cap|None), ...) applied by rebuilding at phase boundaries
     schedule_decay: tuple[tuple[int, int | None, int | None], ...] = ()
+    # ---- lazy aggregation (repro.core.lazy) ------------------------------
+    # LAQ-style skip-round gating: a method group whose accumulated
+    # innovation is small contributes its cached aggregate instead of
+    # firing its collectives. 0.0 = eager (bit-for-bit the non-lazy path);
+    # > 0 routes through the CompositeCompressor.
+    lazy_thresh: float = 0.0
+    # max consecutive skipped rounds before a fire is forced (>= 1 when
+    # lazy_thresh > 0 — no group may silently freeze)
+    max_stale: int = 4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,11 +129,21 @@ class LeafPolicy:
     bits_q: int | None = None   # factor-Q wire bits; None -> same as bits
     topk_ratio: float = 0.01
     min_numel: int | None = None  # per-leaf routing-threshold override
+    # lazy aggregation (repro.core.lazy): relative innovation threshold
+    # (0.0 = eager) and the max consecutive skips before a forced fire
+    lazy_thresh: float = 0.0
+    max_stale: int = 4
 
     def __post_init__(self):
         if self.method not in POLICY_METHODS:
             raise ValueError(
                 f"unknown policy method {self.method!r}; options: {POLICY_METHODS}")
+        if self.lazy_thresh < 0:
+            raise ValueError(f"lazy_thresh must be >= 0, got {self.lazy_thresh}")
+        if self.lazy_thresh > 0 and self.max_stale < 1:
+            raise ValueError(
+                f"lazy_thresh > 0 needs max_stale >= 1 (a staleness cap so "
+                f"no group silently freezes), got max_stale={self.max_stale}")
 
     @property
     def eff_bits_q(self) -> int:
@@ -535,7 +554,7 @@ def make_compressor(cfg: CompressorConfig, abstract_grads: PyTree,
     from repro.core.lq_sgd import LQSGDCompressor
 
     if (cfg.policy not in (None, "uniform") or cfg.warmup_steps
-            or cfg.schedule_decay):
+            or cfg.schedule_decay or cfg.lazy_thresh > 0):
         from repro.core.composite import CompositeCompressor, PolicySchedule
         from repro.core.policy import plan_auto, resolve_policies
         report = None

@@ -1,0 +1,177 @@
+"""Lazy aggregation: LAQ-style skip-round gating over leaf groups.
+
+LAQ ("Communication-Efficient Distributed Learning via Lazily Aggregated
+Quantized Gradients", Sun et al. 2019 — PAPERS.md) skips a worker's upload
+whenever its gradient *innovation* — the change since the last round it
+actually communicated — is small, reusing the stale aggregate instead.
+This composes multiplicatively with LQ-SGD's low-rank + log-quantized
+wire: a round that fires ships ``r(n+m)·b`` bits, and most rounds don't
+fire at all.
+
+Our setting is symmetric data-parallel (no parameter server), so the skip
+decision must be *collective*: every worker computes the identical traced
+predicate from globally-reduced innovation statistics, and the whole
+method group either fires its collectives or contributes its cached
+aggregate. The unit of skipping is the :class:`~repro.core.composite.
+CompositeCompressor`'s per-method leaf group (its lazy subset — see
+below); the decision is in-graph (a jnp predicate on threaded state), so
+the step stays jit/shard_map-clean and schedule rebuilds work unchanged.
+
+The criterion, per lazy leaf ``i`` with policy threshold ``tau_i``:
+
+    x_i     = g_i + residual_i          # the update compression would see
+    innov_i = sum_workers ||x_i - ref_i||^2
+    vote_i  = innov_i > tau_i^2 * sum_workers ||x_i||^2
+
+where ``ref_i`` is ``x_i`` at the group's last fired round. The group
+fires when ANY leaf votes, when ``stale >= max_stale`` (the cap below),
+or during schedule warm-up. All per-leaf statistics ship in ONE fused
+psum (64 bits/leaf of sideband — charged to the CommRecord statically;
+the decision traffic is the price of laziness and is never skippable).
+
+Skip semantics under error feedback — LAQ-faithful: on a skipped round
+NOTHING advances except the staleness counter. Every worker applies the
+cached aggregate again, the round's local gradient is neither applied nor
+banked, and the innovation the skip forfeits is bounded by the threshold.
+(The tempting alternative — banking the skipped gradient into the error
+feedback — double-counts the update: the cached aggregate keeps moving
+the parameters during the skip run, then the bank replays the same
+motion on the next fire; measurably divergent at high staleness.) A
+fired round is byte- and state-identical to an eager round: error
+feedback carries the compression residual exactly as usual, so
+``lazy_thresh = 0`` *and* an always-firing gate both reduce to the eager
+path.
+
+For stochastic gradients the innovation between two independent
+minibatch draws concentrates at ``~2x`` the gradient norm, so skipping
+begins at ``lazy_thresh`` above ``sqrt(2)`` — LAQ's analysis assumes
+deterministic per-worker gradients; thresholds here are relative and the
+sweep in ``benchmarks/lazy_sweep.py`` maps the knee empirically.
+
+State (merged into the composite's threaded pytree, param-shaped
+namespaces shard like the parameter):
+
+    lazy_out[i]   cached synced aggregate (worker-identical, param-shaped)
+    lazy_ref[i]   x at the last fired round (per-worker, param-shaped)
+    lazy_stale[m] consecutive-skip counter per method group (int32),
+                  initialized AT the cap so the first round always fires
+
+Like the schedule warm-up's fp32 shadow, the traced graph still contains
+the group's collectives on every step — XLA cannot drop a collective on a
+traced predicate — so a skipped round *executes* gated collectives whose
+results are discarded. What the wire *semantically* carries is tracked by
+the CommRecord's dynamic tier (:meth:`~repro.core.comm.CommRecord.
+add_gated`): ``effective_bits`` / ``effective_collectives`` report the
+decision sideband plus the gate-weighted group payload, which is what the
+train metrics, ``benchmarks/lazy_sweep.py`` and the planner's
+``p_fire * wire_bits`` cost model account. (Graph-level skipping via
+``lax.cond`` under fully-manual shard_map is a ROADMAP open item.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.comm import AxisComm, CommRecord
+from repro.core.compressors import LeafPlan
+
+__all__ = [
+    "DECISION_BITS_PER_LEAF",
+    "LazyDecision",
+    "group_decision",
+    "group_max_stale",
+    "lazy_subset",
+    "p_fire",
+    "staleness_err",
+]
+
+PyTree = Any
+
+# innovation + norm, fp32 each, per lazy leaf on the fused decision psum
+DECISION_BITS_PER_LEAF = 64
+
+# namespaces the lazy machinery adds to the composite state
+OUT_NS, REF_NS, STALE_NS = "lazy_out", "lazy_ref", "lazy_stale"
+PARAM_SHAPED_NS = (OUT_NS, REF_NS)
+
+
+def lazy_subset(plans: Sequence[LeafPlan], idxs: Sequence[int]) -> list[int]:
+    """The lazily-aggregated members of a method group (policy opt-in)."""
+    return [i for i in idxs if plans[i].policy.lazy_thresh > 0]
+
+
+def group_max_stale(plans: Sequence[LeafPlan], idxs: Sequence[int]) -> int:
+    """The group's staleness cap: the tightest of its members' caps."""
+    return min(plans[i].policy.max_stale for i in idxs)
+
+
+@dataclasses.dataclass
+class LazyDecision:
+    """One group's traced fire/skip decision for this round."""
+
+    fire: jax.Array          # bool scalar, identical on every worker
+    stale: jax.Array         # consecutive-skip counter BEFORE this round
+    new_stale: jax.Array     # counter after: 0 on fire, +1 on skip
+
+    def select(self, fresh: jax.Array, cached: jax.Array) -> jax.Array:
+        return jnp.where(self.fire, fresh, cached)
+
+
+def group_decision(xs: Sequence[jax.Array], refs: Sequence[jax.Array],
+                   threshs: Sequence[float], stale: jax.Array,
+                   max_stale: int, comm: AxisComm, rec: CommRecord, *,
+                   force: jax.Array | None = None) -> LazyDecision:
+    """The collective skip test for one leaf group.
+
+    ``xs`` are the error-corrected updates compression would see this
+    round, ``refs`` the per-worker references from the last fired round.
+    Charges the fused decision psum (64 bits/leaf, 1 collective) to
+    ``rec``'s static tier — it fires every round by construction.
+    """
+    innov = [jnp.sum(jnp.square(x - r.astype(jnp.float32)))
+             for x, r in zip(xs, refs)]
+    norms = [jnp.sum(jnp.square(x)) for x in xs]
+    stats = comm.psum(jnp.stack(innov + norms))
+    rec.add(DECISION_BITS_PER_LEAF * len(xs), 1)
+    n = len(xs)
+    taus = jnp.asarray([t * t for t in threshs], jnp.float32)
+    votes = stats[:n] > taus * stats[n:]
+    fire = jnp.any(votes) | (stale >= max_stale)
+    if force is not None:
+        fire = fire | force
+    new_stale = jnp.where(fire, jnp.zeros_like(stale), stale + 1)
+    return LazyDecision(fire=fire, stale=stale, new_stale=new_stale)
+
+
+# --------------------------------------------------------------------------
+# the planner's static skip model (repro.core.policy)
+# --------------------------------------------------------------------------
+
+def p_fire(lazy_thresh: float, max_stale: int,
+           innovation_rate: float = 0.25) -> float:
+    """Static fire-probability proxy for the auto-planner's cost model.
+
+    Deliberately coarse, like the error proxies in ``core/policy.py``: the
+    per-round relative innovation is modelled as a constant
+    ``innovation_rate`` rho, so the gate fires roughly when
+    ``rho > tau`` — smoothed to ``min(1, (rho/tau)^2)`` — and never less
+    often than the staleness cap's floor ``1/(max_stale+1)``. Eager
+    (``lazy_thresh == 0``) is exactly 1.
+    """
+    if lazy_thresh <= 0:
+        return 1.0
+    floor = 1.0 / (max_stale + 1)
+    return max(floor, min(1.0, (innovation_rate / lazy_thresh) ** 2))
+
+
+def staleness_err(lazy_thresh: float, max_stale: int,
+                  innovation_rate: float = 0.25) -> float:
+    """Error-proxy penalty for acting on a stale aggregate: each skipped
+    round forfeits relative innovation bounded by the threshold, weighted
+    by how often rounds skip (and halved — the cached aggregate still
+    points in the last fired round's descent direction)."""
+    p = p_fire(lazy_thresh, max_stale, innovation_rate)
+    return 0.5 * min(lazy_thresh, 1.0) * (1.0 - p)

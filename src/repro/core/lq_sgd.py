@@ -33,6 +33,12 @@ on *everything*, not just factors).
 Wire accounting: b bits/scalar + 32-bit scale per tensor instance, i.e.
 ``r(n+m)·b`` bits per compressed matrix — the paper's §IV-C claim of a
 ``32/b`` ratio vs PowerSGD.
+
+Skip-round composition: LAQ-style lazy aggregation (:mod:`repro.core.
+lazy`, a ``LeafPolicy.lazy_thresh`` knob) multiplies with this wire — a
+fired round ships ``r(n+m)·b`` bits and most rounds ship only the 64-bit
+decision sideband, with skipped updates recycled through E exactly as in
+PowerSGD (see that module's docstring).
 """
 from __future__ import annotations
 

@@ -49,7 +49,7 @@ from typing import Any, Sequence
 import jax
 
 from repro.core.compressors import (CompressorConfig, LeafPolicy,
-                                    POLICY_METHODS, _leaf_plan, _numel)
+                                    _leaf_plan, _numel)
 from repro.roofline import hw
 
 __all__ = [
@@ -74,13 +74,16 @@ _POLICY_KNOBS = {
     "bits_q": int,
     "topk_ratio": float,
     "min_numel": int,
+    "lazy_thresh": float,
+    "max_stale": int,
 }
 
 
 def uniform_policy(cfg: CompressorConfig) -> LeafPolicy:
     method = _NAME_ALIASES.get(cfg.name, cfg.name)
     return LeafPolicy(method=method, rank=cfg.rank, bits=cfg.bits,
-                      bits_q=cfg.bits_q, topk_ratio=cfg.topk_ratio)
+                      bits_q=cfg.bits_q, topk_ratio=cfg.topk_ratio,
+                      lazy_thresh=cfg.lazy_thresh, max_stale=cfg.max_stale)
 
 
 # --------------------------------------------------------------------------
@@ -173,15 +176,29 @@ class CostModel:
     link_bw: float = hw.ICI_LINK_BW        # bytes/s per ICI link
     peak_flops: float = hw.PEAK_FLOPS_BF16
     ef_discount: float = 0.25  # error feedback recycles the residual
+    # lazy aggregation: modelled per-round relative gradient innovation
+    # (repro.core.lazy.p_fire) — a skippable policy's EXPECTED wire cost
+    # is p_fire * wire_bits + the always-on decision sideband
+    innovation_rate: float = 0.25
 
-    def wire_s(self, bits: int) -> float:
+    def wire_s(self, bits: float) -> float:
         return bits / 8.0 / self.link_bw
 
     def flops_s(self, flops: float) -> float:
         return flops / self.peak_flops
 
-    def cost_s(self, wire_bits: int, flops: float) -> float:
+    def cost_s(self, wire_bits: float, flops: float) -> float:
         return self.wire_s(wire_bits) + self.flops_s(flops)
+
+    def expected_wire_bits(self, pol: LeafPolicy, wire_bits: int) -> float:
+        """p_fire-weighted wire of one leaf: the compute graph always runs
+        (in-graph gating), but the wire only carries the payload on a fired
+        round, plus 64 bits/round of decision sideband."""
+        from repro.core.lazy import DECISION_BITS_PER_LEAF, p_fire
+        if pol.lazy_thresh <= 0:
+            return float(wire_bits)
+        p = p_fire(pol.lazy_thresh, pol.max_stale, self.innovation_rate)
+        return p * wire_bits + DECISION_BITS_PER_LEAF
 
 
 def _spectral_mass(k: int) -> float:
@@ -207,10 +224,18 @@ def _quant_err(bits: int) -> float:
 
 
 def _candidates(pl, numel: int, cm: CostModel, *,
-                ranks, bits_options, topk_ratios, qsgd_bits
+                ranks, bits_options, topk_ratios, qsgd_bits,
+                lazy_options: Sequence[tuple[float, int]] = ()
                 ) -> list[tuple[LeafPolicy, float]]:
     """(policy, error-proxy) candidates for one leaf; the caller attaches
-    wire bits via the real handler accounting."""
+    wire bits via the real handler accounting.
+
+    ``lazy_options`` — ``(lazy_thresh, max_stale)`` pairs — add a
+    skip-round variant of every lossy candidate: its error proxy grows by
+    the staleness penalty (:func:`repro.core.lazy.staleness_err`) and its
+    expected wire shrinks by ``p_fire``, so the planner can trade rank and
+    bits against skip probability.
+    """
     out: list[tuple[LeafPolicy, float]] = [(LeafPolicy(method="raw"), 0.0)]
     inst = pl.shape[1:] if pl.stacked else pl.shape
     compressible = pl.route == "lowrank"
@@ -235,6 +260,20 @@ def _candidates(pl, numel: int, cm: CostModel, *,
         # distortion is the full quantization error)
         for b in bits_options:
             out.append((LeafPolicy(method="lq_sgd", bits=b), _quant_err(b)))
+    if lazy_options:
+        from repro.core.lazy import staleness_err
+        lazy_variants = []
+        for pol, err in out:
+            if pol.method == "raw":
+                continue
+            for thresh, stale in lazy_options:
+                if thresh <= 0:
+                    continue
+                lazy_variants.append((
+                    dataclasses.replace(pol, lazy_thresh=thresh,
+                                        max_stale=stale),
+                    err + staleness_err(thresh, stale, cm.innovation_rate)))
+        out.extend(lazy_variants)
     return out
 
 
@@ -260,15 +299,25 @@ def plan_auto(abstract_grads: PyTree, stacked: PyTree | None = None, *,
               bits_options: Sequence[int] = (4, 8),
               topk_ratios: Sequence[float] = (0.01, 0.05),
               qsgd_bits: Sequence[int] = (8,),
+              lazy_options: Sequence[tuple[float, int]] | None = None,
               ) -> tuple[list[LeafPolicy], list[dict]]:
     """Pick, per leaf, the cheapest policy whose error proxy fits the
     budget. Returns ``(policies, report)`` — report rows carry the chosen
     policy, its predicted wire bits / cost / error, and the raw baseline.
+
+    ``lazy_options`` defaults to ``cfg``'s lazy knobs when
+    ``cfg.lazy_thresh > 0``: every lossy candidate then also competes as a
+    skip-round variant costed at ``p_fire * wire_bits`` + decision
+    sideband, with the staleness penalty added to its error proxy.
     """
     from repro.core.composite import handler_for
+    from repro.core.lazy import DECISION_BITS_PER_LEAF, p_fire
     cfg = cfg or CompressorConfig()
     budget = cfg.error_budget if error_budget is None else error_budget
     cm = cost_model or CostModel()
+    if lazy_options is None:
+        lazy_options = (((cfg.lazy_thresh, cfg.max_stale),)
+                        if cfg.lazy_thresh > 0 else ())
 
     flat = jax.tree_util.tree_flatten_with_path(abstract_grads)[0]
     paths = [jax.tree_util.keystr(kp) for kp, _ in flat]
@@ -297,11 +346,18 @@ def plan_auto(abstract_grads: PyTree, stacked: PyTree | None = None, *,
         for pol, err in _candidates(probe, numel, cm, ranks=ranks,
                                     bits_options=bits_options,
                                     topk_ratios=topk_ratios,
-                                    qsgd_bits=qsgd_bits):
+                                    qsgd_bits=qsgd_bits,
+                                    lazy_options=lazy_options):
             if err > budget:
                 continue
-            bits, pl = wire_bits(pol, path, leaf, st)
-            cost = cm.cost_s(bits, _leaf_flops(pol, pl))
+            fired_bits, pl = wire_bits(pol, path, leaf, st)
+            # accounted wire: a fired round + the leaf's share of the lazy
+            # decision sideband (matches CompositeCompressor accounting);
+            # COST uses the p_fire-weighted expectation
+            bits = fired_bits + (DECISION_BITS_PER_LEAF
+                                 if pol.lazy_thresh > 0 else 0)
+            cost = cm.cost_s(cm.expected_wire_bits(pol, fired_bits),
+                             _leaf_flops(pol, pl))
             key = (cost, bits, err)
             if best is None or key < best[0]:
                 best = (key, pol, bits, err)
@@ -314,6 +370,10 @@ def plan_auto(abstract_grads: PyTree, stacked: PyTree | None = None, *,
             "path": path, "shape": list(probe.shape), "numel": numel,
             "method": pol.method, "rank": pol.rank, "bits": pol.bits,
             "topk_ratio": pol.topk_ratio,
+            "lazy_thresh": pol.lazy_thresh, "max_stale": pol.max_stale,
+            "p_fire": p_fire(pol.lazy_thresh, pol.max_stale,
+                             cm.innovation_rate) if pol.lazy_thresh > 0
+            else 1.0,
             "wire_bits": best[2], "est_err": best[3],
             "est_cost_us": cost * 1e6, "raw_bits": numel * 32,
         })
@@ -330,6 +390,8 @@ def format_plan_report(report: list[dict]) -> str:
                  "lq_sgd": f"r{r['rank']}b{r['bits']}",
                  "topk": f"p{r['topk_ratio']}",
                  "qsgd": f"b{r['bits']}"}.get(r["method"], "")
+        if r.get("lazy_thresh", 0) > 0:
+            knobs += f"~lazy(p={r['p_fire']:.2f})"
         lines.append(
             f"  {r['path']:<40} {str(tuple(r['shape'])):<20} "
             f"-> {r['method']}{knobs:<8} {r['wire_bits']/8e3:8.2f}KB "

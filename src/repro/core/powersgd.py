@@ -27,6 +27,14 @@ Distributed-correctness invariants (tested):
     the P all-reduce exact in expectation;
   * error feedback E is per-worker (never synchronized);
   * after sync every worker holds the identical reconstruction G^.
+
+Lazy aggregation (:mod:`repro.core.lazy`) composes from OUTSIDE this
+handler, with zero handler changes: on a skipped round the composite
+discards this handler's outputs and holds E and warm-start Q at their
+prior values (LAQ-faithful — the skipped gradient is neither applied nor
+banked; see the lazy module docstring for why banking into E
+double-counts), so E and Q only evolve with rounds that actually
+shipped, and a fired round is byte- and state-identical to an eager one.
 """
 from __future__ import annotations
 

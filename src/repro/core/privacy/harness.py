@@ -36,7 +36,6 @@ import time
 from typing import Any, Callable, Mapping
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.privacy.gia import (GIAConfig, invert_gradients_batched,
                                     observed_gradient)

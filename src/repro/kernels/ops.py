@@ -8,7 +8,6 @@ each other across shape/dtype sweeps.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.flash_attention import flash_attention_pallas

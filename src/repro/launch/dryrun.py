@@ -26,14 +26,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import INPUT_SHAPES, get_config, list_archs, shape_supported
-from repro.configs.base import InputShape, ModelConfig
+from repro.configs.base import ModelConfig
 from repro.core import CompressorConfig
 from repro.launch.inputs import input_specs
 from repro.launch.mesh import make_production_mesh, use_mesh
-from repro.launch.sharding import param_specs
-from repro.models.model import init_caches, init_params, stacked_flags
+from repro.models.model import init_caches, init_params
 from repro.roofline import hw
-from repro.roofline.analysis import parse_collectives, roofline_terms
+from repro.roofline.analysis import roofline_terms
 from repro.roofline.flops_model import per_device_flops
 from repro.serving.engine import (build_decode_step, build_prefill_step,
                                   serve_shardings)

@@ -19,7 +19,7 @@ from repro.launch.mesh import make_mesh, make_production_mesh, use_mesh
 from repro.models.model import init_params
 from repro.models.multimodal import codec_tokens_stub, conditioning_stub, vq_tokens_stub
 from repro.serving.engine import (build_decode_step, build_prefill_step,
-                                  greedy_sample, serve_shardings)
+                                  greedy_sample)
 
 
 def main() -> None:

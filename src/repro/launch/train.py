@@ -63,6 +63,15 @@ def main() -> None:
     ap.add_argument("--decay", default=None,
                     help="schedule: piecewise rank/bit caps, e.g. "
                          "'200:rank=1,500:bits=4' (rebuilds at boundaries)")
+    ap.add_argument("--lazy-thresh", type=float, default=0.0,
+                    help="lazy aggregation: relative innovation threshold; "
+                         "a method group whose accumulated update moved "
+                         "less than this (vs its last fired round) skips "
+                         "its collectives and reuses the cached aggregate "
+                         "(0 = eager)")
+    ap.add_argument("--max-stale", type=int, default=4,
+                    help="lazy aggregation: max consecutive skipped rounds "
+                         "before a fire is forced")
     ap.add_argument("--rank", type=int, default=1)
     ap.add_argument("--bits", type=int, default=8)
     ap.add_argument("--alpha", type=float, default=10.0)
@@ -112,7 +121,9 @@ def main() -> None:
                                 policy=args.policy or cfg.compression_policy,
                                 error_budget=args.error_budget,
                                 warmup_steps=args.warmup,
-                                schedule_decay=decay)
+                                schedule_decay=decay,
+                                lazy_thresh=args.lazy_thresh,
+                                max_stale=args.max_stale)
     compressor = make_model_compressor(cfg, comp_cfg)
     if getattr(compressor, "plan_report", None):
         from repro.core.policy import format_plan_report
@@ -165,11 +176,15 @@ def main() -> None:
             jstep, st_sh, _, state_abs = build(comp0)
             state = sharded_init(cfg, jax.random.PRNGKey(0), optimizer,
                                  comp0, mesh, st_sh)
+        lazy_note = ""
+        if getattr(comp0, "lazy_groups", None):
+            lazy_note = (f" expected(lazy)="
+                         f"{comp0.expected_wire_bits_per_step()/8e6:.3f}MB")
         print(f"arch={cfg.name} params={sum(x.size for x in jax.tree.leaves(state['params']))/1e6:.1f}M "
               f"mesh={dict(mesh.shape)} compressor={args.compressor} "
               f"policy={comp_cfg.policy or 'uniform'} "
               f"runtime={args.runtime} microbatch={args.microbatch} "
-              f"wire/step={comp0.wire_bits_per_step()/8e6:.3f}MB "
+              f"wire/step={comp0.wire_bits_per_step()/8e6:.3f}MB{lazy_note} "
               f"(uncompressed={sum(x.size for x in jax.tree.leaves(state['params']))*4/1e6:.1f}MB)")
         rcfg = RuntimeConfig(steps=args.steps, log_every=args.log_every,
                              ckpt_every=args.ckpt_every,

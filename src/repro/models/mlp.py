@@ -4,9 +4,7 @@ from __future__ import annotations
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
 from repro.models.common import KeyGen, act_fn, dense_init
 
 __all__ = ["init_mlp", "mlp_forward"]

@@ -18,7 +18,6 @@ Modes (same function, driven by cache args):
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax

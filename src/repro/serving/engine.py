@@ -15,7 +15,6 @@ Cache sharding policy:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -143,12 +143,17 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, compressor: GradCompressor,
         grads, comp_local, rec = compressor.sync(grads, comp_local, comm)
         new_params, new_opt = optimizer.update(grads, state["opt"], params)
         metrics = {k: jax.lax.pmean(v, dp) for k, v in metrics.items()}
-        metrics["wire_mb_per_step"] = jnp.full((), rec.megabytes, jnp.float32)
+        # EFFECTIVE accounting: static for eager compressors (a plain int,
+        # same number every step), static + gate-weighted for lazily
+        # aggregated groups (a traced scalar — skipped rounds report only
+        # the decision sideband, so the logged trajectory shows the skips)
+        metrics["wire_mb_per_step"] = jnp.asarray(
+            rec.effective_bits() / 8e6, jnp.float32)
         # collective COUNT is the latency-side cost the fused codec phases
         # shrink (2 + n_raw per step when cfg.fuse_collectives) — surface it
         # next to the byte-side cost so both regressions show up in logs
-        metrics["collectives_per_step"] = jnp.full((), rec.n_collectives,
-                                                   jnp.float32)
+        metrics["collectives_per_step"] = jnp.asarray(
+            rec.effective_collectives(), jnp.float32)
         new_state = dict(
             params=new_params, opt=new_opt,
             comp=jax.tree.map(lambda x: x[None], comp_local),

@@ -1,0 +1,29 @@
+"""benchmarks.run CLI contract: an unknown --only section must exit
+non-zero (a typo'd section name once ran zero sections and left CI
+green), and the registry itself is the single source of truth."""
+import os
+import subprocess
+import sys
+
+
+def _run_cli(*args):
+    env = dict(os.environ)
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    return subprocess.run([sys.executable, "-m", "benchmarks.run", *args],
+                          capture_output=True, text=True, cwd=root, env=env,
+                          timeout=300)
+
+
+def test_unknown_only_section_exits_nonzero():
+    out = _run_cli("--only", "comm_cots")  # the classic typo
+    assert out.returncode != 0
+    assert "unknown --only section" in out.stderr
+    # the error enumerates the real registry, typo-repair included
+    assert "comm_cost" in out.stderr and "lazy_sweep" in out.stderr
+
+
+def test_known_only_section_runs():
+    out = _run_cli("--only", "comm_cost")
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "comm_cost/CIFAR-10/lq_sgd" in out.stdout

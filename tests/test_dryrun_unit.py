@@ -1,6 +1,5 @@
 """Unit tests for dry-run inputs and report generation (no 256-chip compile
 here — the real sweep artifacts live in experiments/dryrun/)."""
-import json
 import os
 
 import jax.numpy as jnp

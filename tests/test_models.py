@@ -11,8 +11,8 @@ except ImportError:  # clean env: seeded-sweep fallback, see the shim
     from _hypothesis_compat import given, settings, strategies as st
 
 from repro.configs.base import ModelConfig, attn, mamba
-from repro.models.model import (count_params, forward, init_caches,
-                                init_params, stacked_flags)
+from repro.models.model import (forward, init_caches, init_params,
+                                stacked_flags)
 from repro.models.moe import moe_capacity, moe_forward, init_moe
 from repro.models.common import KeyGen
 from repro.models.resnet import init_resnet18, resnet18_forward, resnet18_param_count

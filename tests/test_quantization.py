@@ -11,7 +11,6 @@ except ImportError:  # clean env: seeded-sweep fallback, see the shim
 
 from repro.core.quantization import (
     LogQuantConfig,
-    dequantize,
     dequantize_with_scale,
     log_compress,
     log_expand,

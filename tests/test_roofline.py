@@ -1,12 +1,10 @@
 """Roofline machinery: HLO collective parsing + analytic FLOPs validation."""
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.configs import INPUT_SHAPES, get_config
 from repro.roofline import hw
-from repro.roofline.analysis import (RooflineReport, parse_collectives,
-                                     roofline_terms)
+from repro.roofline.analysis import RooflineReport, parse_collectives
 from repro.roofline.flops_model import per_device_flops
 
 HLO_SAMPLE = """

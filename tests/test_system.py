@@ -6,8 +6,6 @@ fewer gradient bytes — exercised over real N-worker collective semantics.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.configs import get_config, list_archs
 from repro.configs.base import ModelConfig, attn
@@ -15,7 +13,6 @@ from repro.core import AxisComm, CompressorConfig, make_compressor
 from repro.data.synthetic import LMDataConfig, lm_batch
 from repro.models.model import init_params, stacked_flags
 from repro.train.loss import lm_loss
-from repro.train.optimizer import sgd
 
 N = 4
 

@@ -14,7 +14,6 @@ import pytest
 
 from repro.checkpoint.io import restore as ckpt_restore
 from repro.configs.base import ModelConfig, attn
-from repro.data.synthetic import LMDataConfig, lm_batch
 from repro.models.model import init_params
 from repro.train.loss import lm_loss
 from repro.train.optimizer import adam, sgd

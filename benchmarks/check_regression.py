@@ -7,6 +7,16 @@ the committed snapshots and fail CI on hard regressions.
     PYTHONPATH=src python -m benchmarks.check_regression \
         --baseline .bench_baseline
 
+Besides gating, this is also the keeper of the per-PR time series: with
+``--append-history [LABEL]`` a dated point of headline metrics (the
+HISTORY_SERIES paths below) is appended to ``BENCH_history.jsonl`` — one
+JSON object per line, committed alongside the snapshots so the
+bytes/collectives/throughput trajectory across PRs is a plain
+``jq``-able file rather than an archaeology dig through git history of
+the full snapshots. CI appends a point labelled with the commit SHA and
+uploads it as an artifact; committing the point is the PR author's move
+(regenerate + append + ``git add BENCH_history.jsonl``).
+
 Two kinds of checks:
 
 * **Hard** (exit 1): metrics that are deterministic static accounting —
@@ -34,8 +44,29 @@ import argparse
 import json
 import os
 import sys
+import time
 
 CC = "BENCH_comm_cost.json"
+ST = "BENCH_step_time.json"
+
+HISTORY = "BENCH_history.jsonl"
+
+# (file, dotted-path prefix) headline series recorded per PR — the static
+# accounting that the hard gates watch, plus the throughput headlines
+HISTORY_SERIES = [
+    (CC, "mb_per_epoch."),
+    (CC, "policy_sweep.uniform_best_wire_bits"),
+    (CC, "lazy_sweep.gate.collectives_ratio"),
+    (CC, "lazy_sweep.adaptive.fire_rate_windows"),
+    (ST, "speedup_async_vs_sync"),
+    (ST, "lazy_elision.speedup_elide_vs_gate"),
+    (ST, "lazy_elision.speedup_elide_vs_eager"),
+    (ST, "lazy_elision.steps_per_s."),
+    (
+        "BENCH_quant_kernel.json",
+        "rows.quant_kernel/pallas_fused_quantize_pack.us_per_call",
+    ),
+]
 
 # (file, dotted-path prefix, lower_is_better, relative tolerance, hard)
 RULES = [
@@ -112,7 +143,21 @@ def check_lazy_gate(fresh_dir):
     if not gate.get("passed"):
         what = "no threshold reached collectives/step < 0.5x eager at equal accuracy"
         return [f"HARD: lazy-aggregation gate failed: {what} ({gate})"]
-    return []
+    out = []
+    adaptive = payload.get("lazy_sweep", {}).get("adaptive")
+    if adaptive is not None:  # adaptive-LAQ acceptance (PR: elision)
+        if not adaptive.get("ramps_down"):
+            out.append(
+                "HARD: adaptive-LAQ skip rate failed to ramp as the run "
+                f"converged: windows={adaptive.get('fire_rate_windows')} "
+                f"vs fixed rate {adaptive.get('fixed_fire_rate')}"
+            )
+        if not adaptive.get("acc_within_band"):
+            out.append(
+                "HARD: adaptive-LAQ accuracy left the fixed-threshold "
+                f"band: {adaptive.get('acc')} vs {adaptive.get('fixed_acc')}"
+            )
+    return out
 
 
 def compare(baseline_dir, fresh_dir):
@@ -148,12 +193,39 @@ def compare(baseline_dir, fresh_dir):
     return hard, warn
 
 
+def append_history(fresh_dir, label=None, path=HISTORY):
+    """Append one dated point of HISTORY_SERIES metrics as a JSONL line."""
+    metrics, cache = {}, {}
+    for fname, prefix in HISTORY_SERIES:
+        if fname not in cache:
+            cache[fname] = _flatten(_load(os.path.join(fresh_dir, fname)) or {})
+        for p, v in cache[fname].items():
+            if p.startswith(prefix):
+                metrics[f"{fname}:{p}"] = v
+    point = {
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "label": label or None,
+        "metrics": metrics,
+    }
+    with open(path, "a") as f:
+        f.write(json.dumps(point, sort_keys=True) + "\n")
+    return point
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     base_help = "directory holding the committed BENCH_*.json snapshots"
     ap.add_argument("--baseline", default=".bench_baseline", help=base_help)
     fresh_help = "directory holding the freshly generated files"
     ap.add_argument("--fresh", default=".", help=fresh_help)
+    hist_help = (
+        f"append a dated point of headline metrics to {HISTORY} "
+        "(only when the gate passes); optional value = point label, "
+        "e.g. the commit SHA"
+    )
+    ap.add_argument(
+        "--append-history", nargs="?", const="", default=None, help=hist_help
+    )
     args = ap.parse_args()
 
     hard = check_lazy_gate(args.fresh)
@@ -172,6 +244,9 @@ def main():
         print(f"\nbench-regression gate: {len(hard)} hard failure(s)")
         sys.exit(1)
     print(f"bench-regression gate: OK ({len(warn)} warning(s))")
+    if args.append_history is not None:
+        point = append_history(args.fresh, args.append_history or None)
+        print(f"appended {len(point['metrics'])} metric(s) to {HISTORY}")
 
 
 if __name__ == "__main__":

@@ -8,13 +8,15 @@ paper's steps-per-epoch (5 workers x batch 128 -> 79 steps on 50k images,
 97 on 60k MNIST). Validated against the paper's reported MBs in tests.
 
 ``--check`` runs the codec-layer smoke invariants instead of the table:
-fused collective counts (2 + n_raw per step for PowerSGD AND LQ-SGD) and
-packed-wire accounting (b=4 gathered bytes == wire_bits_per_step), by
-actually executing sync under N-worker vmap collective semantics — plus
-the lazy-aggregation accounting invariants (repro.core.lazy): a fired
-round's EFFECTIVE wire equals ``wire_bits_per_step()`` (payload + 64-bit
-decision sideband per lazy leaf) and a skipped round charges exactly the
-sideband with ONE collective.
+collective counts INCLUDING the quantization-scale sideband (PowerSGD's
+fp32 factor wire carries no scales, so it stays 2 + n_raw; LQ-SGD adds one
+fused scale pmax per phase — 2·2 + 2·n_raw fused, and one pmax per tensor
+unfused) and packed-wire accounting (b=4 gathered bytes ==
+wire_bits_per_step), by actually executing sync under N-worker vmap
+collective semantics — plus the lazy-aggregation accounting invariants
+(repro.core.lazy): a fired round's EFFECTIVE wire equals
+``wire_bits_per_step()`` (payload + decision sideband) and a skipped round
+charges exactly the sideband with ONE collective.
 """
 from __future__ import annotations
 
@@ -118,9 +120,10 @@ def check() -> list[tuple[str, float, str]]:
                 for k, v in grads.items()}
     stacked = {"w": False, "b": False, "scan": True}
     out = []
-    for name, bits in (("powersgd", 32), ("lq_sgd", 8), ("lq_sgd", 4)):
+    for name, bits, fuse in (("powersgd", 32, True), ("lq_sgd", 8, True),
+                             ("lq_sgd", 4, True), ("lq_sgd", 8, False)):
         cfg = CompressorConfig(name=name, rank=2, bits=min(bits, 16),
-                               fuse_collectives=True)
+                               fuse_collectives=fuse)
         comp = make_compressor(cfg, abstract, stacked)
         state = jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (n_workers,) + x.shape),
@@ -135,11 +138,22 @@ def check() -> list[tuple[str, float, str]]:
         jax.vmap(worker, axis_name="data")(grads, state)
         rec = recs[0]
         n_raw = sum(1 for pl in comp.plans if pl.route != "lowrank")
-        tag = f"{name}_b{bits}"
-        assert rec.n_collectives == 2 + n_raw, (
-            f"{tag}: fused collective count {rec.n_collectives} != 2 + {n_raw}")
+        n_comp = len(comp.plans) - n_raw
+        tag = f"{name}_b{bits}" + ("" if fuse else "_unfused")
+        # scale sideband: fp32 factors carry none; the quantized wire adds
+        # one fused pmax per phase (or one per tensor unfused), and each
+        # quantized raw leaf runs its own pmax + gather pair
+        if name == "powersgd":
+            want = 2 + n_raw
+        elif fuse:
+            want = 2 * 2 + 2 * n_raw
+        else:
+            want = 2 * 2 * n_comp + 2 * n_raw
+        assert rec.n_collectives == want, (
+            f"{tag}: collective count {rec.n_collectives} != {want} "
+            f"(scale sideband included)")
         out.append((f"comm_check/{tag}/n_collectives", rec.n_collectives,
-                    f"== 2 + n_raw ({n_raw} raw leaves)"))
+                    f"== {want} incl. scale pmaxes ({n_raw} raw leaves)"))
         assert rec.bits_sent == comp.wire_bits_per_step(), (
             f"{tag}: gathered wire bits {rec.bits_sent} != "
             f"accounting {comp.wire_bits_per_step()}")
@@ -178,7 +192,8 @@ def check_lazy(grads, abstract, stacked, n_workers
     fired = comp.wire_bits_per_step()
     sideband = comp.decision_bits_per_step()
     n_lazy = sum(len(v) for v in comp.lazy_groups.values())
-    assert sideband == 64 * n_lazy, (sideband, n_lazy)
+    n_groups = len(comp.lazy_groups)
+    assert sideband == 64 * n_lazy + 32 * n_groups, (sideband, n_lazy)
     want = [(fired, None), (sideband, 1.0), (sideband, 1.0), (fired, None)]
     for step, ((bits, colls), (wbits, wcolls)) in enumerate(zip(hist, want)):
         assert bits == wbits, (
@@ -190,7 +205,8 @@ def check_lazy(grads, abstract, stacked, n_workers
         ("comm_check/lazy/fired_bits", fired,
          "fired round effective bits == wire_bits_per_step()"),
         ("comm_check/lazy/skip_bits", sideband,
-         "skipped round charges only the 64-bit/leaf decision sideband"),
+         "skipped round charges only the decision sideband "
+         "(64 bits/leaf + 32-bit group force-vote slot)"),
     ]
 
 

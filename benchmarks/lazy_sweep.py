@@ -4,10 +4,15 @@ per-leaf compression (repro.core.lazy).
 For each ``(lazy_thresh, max_stale)`` point the mini-CNN trains with the
 lazily-aggregated LQ-SGD composite under exact N-worker collective
 semantics, recording the per-step EFFECTIVE wire accounting (the
-CommRecord's dynamic tier: skipped rounds charge only the 64-bit/leaf
-decision sideband) next to a convergence proxy (final train accuracy +
-last loss). The first row is the eager baseline (``lazy_thresh=0`` — no
-gating machinery, bit-for-bit the plain composite).
+CommRecord's dynamic tier: skipped rounds charge only the decision
+sideband — 64 bits/leaf + a 32-bit force-vote slot per group) next to a
+convergence proxy (final train accuracy + last loss). The first row is
+the eager baseline (``lazy_thresh=0`` — no gating machinery, bit-for-bit
+the plain composite). A dedicated longer run (the ``adaptive`` payload
+block, see ``_adaptive_block``) engages the drift-EMA threshold scaling
+against a fixed-threshold control: its per-window fire rate must ramp
+DOWN as the CNN converges, at control-band accuracy — a second CI
+acceptance next to the ``gate`` block.
 
 The ``gate`` block is the CI acceptance invariant
 (``benchmarks/check_regression.py`` hard-fails on it): some threshold
@@ -43,11 +48,23 @@ QUICK_SWEEP = ((0.0, 4), (1.5, 4), (1.5, 8))
 ACC_BAND = 0.02          # convergence proxy: acc within this of eager
 GATE_RATIO = 0.5         # acceptance: collectives/step < 0.5x eager
 
+# adaptive-LAQ acceptance run: a SUB-knee threshold (< sqrt(2), so vote
+# fires dominate while gradients are big) with the drift-EMA cap engaged,
+# against a fixed-threshold control at the same point. Needs a run long
+# enough for the CNN to actually converge (loss ~5e-3, not the sweep's
+# 60-step 0.4) — the ramp IS convergence made visible in the fire rate.
+ADAPTIVE_POINT = (1.0, 8, 16.0)    # (lazy_thresh, max_stale, cap)
+ADAPTIVE_STEPS = 180
+QUICK_ADAPTIVE_STEPS = 120
+N_WINDOWS = 3            # fire-rate trajectory granularity
 
-def _config(thresh: float, max_stale: int) -> CompressorConfig:
+
+def _config(thresh: float, max_stale: int,
+            adaptive: float = 0.0) -> CompressorConfig:
     return CompressorConfig(name="lq_sgd", rank=1, bits=8,
                             fuse_collectives=True,
-                            lazy_thresh=thresh, max_stale=max_stale)
+                            lazy_thresh=thresh, max_stale=max_stale,
+                            lazy_adaptive=adaptive)
 
 
 def train_lazy(cc: CompressorConfig, steps: int = 60, lr: float = 0.05,
@@ -97,6 +114,39 @@ def train_lazy(cc: CompressorConfig, steps: int = 60, lr: float = 0.05,
     return acc, losses, bits, colls
 
 
+def _adaptive_block(quick: bool) -> dict:
+    """The adaptive-LAQ acceptance: with the drift-EMA cap engaged the
+    per-window fire rate must RAMP DOWN as the run converges — a fixed
+    threshold at the same point holds (near) full rate — at accuracy
+    within ACC_BAND of the fixed control. check_regression hard-fails on
+    ``ramps_down``/``acc_within_band``."""
+    steps = QUICK_ADAPTIVE_STEPS if quick else ADAPTIVE_STEPS
+    thresh, max_stale, cap = ADAPTIVE_POINT
+    w = steps // N_WINDOWS
+
+    def windows(colls):
+        fired = np.asarray(colls) > 1.0
+        return ([float(np.mean(fired[i:i + w]))
+                 for i in range(0, steps, w)], float(np.mean(fired)))
+
+    acc_a, losses_a, _, colls_a = train_lazy(
+        _config(thresh, max_stale, cap), steps=steps)
+    acc_f, _, _, colls_f = train_lazy(
+        _config(thresh, max_stale), steps=steps)
+    wins_a, rate_a = windows(colls_a)
+    wins_f, rate_f = windows(colls_f)
+    return {
+        "name": f"adaptive_t{thresh}_s{max_stale}_a{cap:g}",
+        "steps": steps, "lazy_thresh": thresh, "max_stale": max_stale,
+        "lazy_adaptive": cap,
+        "fire_rate": rate_a, "fire_rate_windows": wins_a,
+        "fixed_fire_rate": rate_f, "fixed_fire_rate_windows": wins_f,
+        "acc": acc_a, "fixed_acc": acc_f, "lossT": losses_a[-1],
+        "ramps_down": wins_a[0] > wins_a[-1] and rate_a < rate_f,
+        "acc_within_band": acc_a >= acc_f - ACC_BAND,
+    }
+
+
 def bench(quick: bool = False) -> tuple[list[tuple[str, float, str]], dict]:
     """Shared benchmarks.run contract: (csv rows, payload)."""
     steps = 60
@@ -130,11 +180,18 @@ def bench(quick: bool = False) -> tuple[list[tuple[str, float, str]], dict]:
                if r["collectives_ratio"] < GATE_RATIO
                and r["acc"] >= eager["acc"] - ACC_BAND]
     best = min(passing, key=lambda r: r["collectives_ratio"], default=None)
+    adaptive = _adaptive_block(quick)
+    rows.append(("lazy_sweep/adaptive", adaptive["fire_rate"],
+                 f"windows={adaptive['fire_rate_windows']} "
+                 f"fixed={adaptive['fixed_fire_rate']:.2f} "
+                 f"acc={adaptive['acc']:.3f} "
+                 f"ramps_down={adaptive['ramps_down']}"))
     payload = {
         "bench": "lazy_sweep", "schema": 1, "quick": quick, "steps": steps,
         "model": "mini_cnn", "base": "lq_sgd_r1_b8_fused",
         "acc_band": ACC_BAND, "gate_ratio": GATE_RATIO,
         "results": results,
+        "adaptive": adaptive,
         "gate": {
             "passed": best is not None,
             "best": None if best is None else best["name"],

@@ -15,7 +15,8 @@ import numpy as np
 
 from repro.core.codec import LogQuantCodec, pack_nibbles
 from repro.kernels import ref
-from repro.kernels.log_quant import log_quantize_pallas, pack_nibbles_pallas
+from repro.kernels.log_quant import (log_quantize_pack_pallas,
+                                     log_quantize_pallas, pack_nibbles_pallas)
 
 
 BENCH_JSON = "BENCH_quant_kernel.json"
@@ -61,6 +62,13 @@ def run() -> list[tuple[str, float, str]]:
                 f"{codes4.size} codes -> {(codes4.size + 1) // 2} bytes"))
     out.append(("quant_kernel/pallas_pack_nibbles", us_pack_pl,
                 "interpret-mode (CPU); TPU is the target"))
+    # fused quantize+pack: ONE pallas_call vs the two-kernel pipeline above
+    us_fused = _time(lambda v: log_quantize_pack_pallas(v, scale, bits=4,
+                                                        alpha=10.0,
+                                                        interpret=True), p)
+    out.append(("quant_kernel/pallas_fused_quantize_pack", us_fused,
+                f"one pallas_call; unfused={us_pallas + us_pack_pl:.0f}us "
+                "(quantize + pack kernels)"))
 
     # ---- end-to-end codec encode (quantize + pack), both backends ----
     xn = p / jnp.maximum(scale, 1e-9)
@@ -76,6 +84,9 @@ def run() -> list[tuple[str, float, str]]:
     assert np.array_equal(np.asarray(got), np.asarray(want))
     assert np.array_equal(np.asarray(pack_nibbles_pallas(codes4, interpret=True)),
                           np.asarray(pack_nibbles(codes4)))
+    fused = log_quantize_pack_pallas(p, scale, bits=4, alpha=10.0,
+                                     interpret=True)
+    assert np.array_equal(np.asarray(fused), np.asarray(pack_nibbles(codes4)))
     return out
 
 

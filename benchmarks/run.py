@@ -17,6 +17,10 @@ Prints ``name,us_per_call,derived`` CSV (scaffold contract):
   * quant_kernel  -> §IV-C quantization-overhead claim + kernel parity
   * step_time     -> wall-clock throughput: sync loop vs async runtime
                      (steps/sec, tokens/sec, host-blocked fraction)
+  * lazy_elision  -> wall-clock proof of graph-level collective elision:
+                     eager vs lazy-gate vs lazy-elide steps/sec on a real
+                     8-device host-platform mesh (subprocess; merged into
+                     BENCH_step_time.json)
 
 Every section module implements the shared JSON contract:
 
@@ -49,17 +53,20 @@ def main() -> None:
                     help="also write each section's BENCH_*.json")
     args = ap.parse_args()
 
-    from benchmarks import (comm_cost, convergence, gia_ssim, lazy_sweep,
-                            policy_sweep, quant_kernel, step_time)
+    from benchmarks import (comm_cost, convergence, gia_ssim, lazy_elision,
+                            lazy_sweep, policy_sweep, quant_kernel,
+                            step_time)
 
-    # policy_sweep/lazy_sweep AFTER comm_cost: they merge into
-    # BENCH_comm_cost.json
+    # key-merging sections AFTER their owning file's section:
+    # policy_sweep/lazy_sweep ride in BENCH_comm_cost.json, lazy_elision
+    # in BENCH_step_time.json
     sections = {
         "comm_cost": comm_cost,
         "policy_sweep": policy_sweep,
         "lazy_sweep": lazy_sweep,
         "quant_kernel": quant_kernel,
         "step_time": step_time,
+        "lazy_elision": lazy_elision,
         "convergence": convergence,
         "gia_ssim": gia_ssim,
     }

@@ -181,11 +181,16 @@ class LogQuantCodec(WireCodec):
         return quantize(x, self._cfg)
 
     def encode(self, x, *, key=None):
+        if self.bits <= 4 and self.backend == "pallas":
+            # single fused pallas_call: quantize + nibble-pack in one VMEM
+            # pass, so the int8 codes never round-trip through HBM between
+            # two kernel launches (bytes identical to the jnp packer)
+            from repro.kernels.log_quant import log_quantize_pack_pallas
+            return log_quantize_pack_pallas(x, jnp.float32(1.0),
+                                            bits=self.bits, alpha=self.alpha,
+                                            interpret=_pallas_interpret())
         c = self.codes(x)
         if self.bits <= 4:
-            if self.backend == "pallas":
-                from repro.kernels.log_quant import pack_nibbles_pallas
-                return pack_nibbles_pallas(c, interpret=_pallas_interpret())
             return pack_nibbles(c)
         return c.reshape(-1)
 
@@ -300,8 +305,15 @@ def codec_phase(xs: Sequence[jax.Array], stacked_flags: Sequence[bool],
     ``rec`` is charged the *actual* bits of each encoded wire array (packed
     b<=4 arrays are half their int8 size) plus 32 bits per scale, unless
     ``account_bits`` overrides the payload (TopK's sparse accounting over a
-    dense simulation). Returns the synchronized (mean) tensors, one per
-    input, in input shapes.
+    dense simulation). Collective COUNTS include the scale sideband: a
+    scale-bearing codec charges one pmax when ``fuse=True`` else one per
+    tensor, on top of the gather/pmean collectives. Returns the
+    synchronized (mean) tensors, one per input, in input shapes.
+
+    Branch-safety: this function is pure in its traced values (the
+    ``CommRecord`` mutations are Python-level, static accounting), so it is
+    callable inside a ``lax.cond`` branch — the lazy-aggregation elision
+    path (:mod:`repro.core.composite`) relies on this.
     """
     n = len(xs)
     if n == 0:
@@ -316,6 +328,10 @@ def codec_phase(xs: Sequence[jax.Array], stacked_flags: Sequence[bool],
             gmax = comm.fused_pmax(local)
         else:
             gmax = [comm.pmax(l) for l in local]
+        # the scale sideband is a real collective on the interconnect — one
+        # fused pmax, or one per tensor — and is charged where it fires (its
+        # BITS ride in codec.scale_bits with the payload accounting below)
+        rec.add(0, 1 if fuse else n)
         safes = [jnp.where(s > 0, s, 1.0) for s in gmax]
         xn = [x / s for x, s in zip(xs, safes)]
         n_scales = [s.size for s in safes]

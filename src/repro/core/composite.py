@@ -43,7 +43,11 @@ LAQ-style skip decision per subset per step. On a skip the subset
 contributes its cached aggregate (``lazy_out``) instead of fresh
 collectives and no compressor state advances (LAQ-faithful — see
 ``_sync_lazy_group``); a ``max_stale`` cap forces a fire so no group
-silently freezes. Eager leaves of the same method sync in their own
+silently freezes. With ``cfg.lazy_mode="elide"`` (default) the group's
+handler sync lives in the true branch of a ``lax.cond`` on the fire
+predicate, so a skipped round's collectives are absent from the compiled
+program, not just discarded; ``"gate"`` keeps the legacy trace-always,
+``jnp.where``-select dispatch (bit-identical, benchmark baseline). Eager leaves of the same method sync in their own
 (fused) phase set every step. ``lazy_thresh = 0`` builds none of the
 machinery — the composite is bit-for-bit the eager one
 (regression-tested, all four methods, fused and unfused).
@@ -134,6 +138,9 @@ class CompositeCompressor(GradCompressor):
                  stacked: PyTree | None = None, *,
                  policies: Sequence[LeafPolicy] | Callable[[str, Any], LeafPolicy],
                  schedule: PolicySchedule | None = None):
+        if cfg.lazy_mode not in ("elide", "gate"):
+            raise ValueError(f"unknown lazy_mode {cfg.lazy_mode!r}; "
+                             "options: 'elide', 'gate'")
         self.cfg = cfg
         self.treedef = jax.tree_util.tree_structure(abstract_grads)
         self._abstract = abstract_grads
@@ -184,6 +191,9 @@ class CompositeCompressor(GradCompressor):
             # cached aggregate is never consumed before it exists
             state[lazy_mod.STALE_NS][m] = jnp.asarray(
                 lazy_mod.group_max_stale(self.plans, lz), jnp.int32)
+            if lazy_mod.group_adaptive_cap(self.plans, lz) > 0:
+                state.setdefault(lazy_mod.EMA_NS, {})
+                state[lazy_mod.EMA_NS][m] = jnp.zeros((2,), jnp.float32)
         return state
 
     def _has_err(self, i: int, state: PyTree) -> bool:
@@ -255,9 +265,9 @@ class CompositeCompressor(GradCompressor):
     def _sync_lazy_group(self, m: str, idxs: list[int], leaves, state,
                          comm: AxisComm, rec: CommRecord, warm
                          ) -> tuple[dict[int, jax.Array], dict]:
-        """One method group's lazy subset: collective skip decision, gated
-        handler sync, cached-aggregate selection (module docstring and
-        :mod:`repro.core.lazy` carry the full semantics).
+        """One method group's lazy subset: collective skip decision, the
+        handler sync dispatched on it, cached-aggregate selection (module
+        docstring and :mod:`repro.core.lazy` carry the full semantics).
 
         LAQ-faithful skip: the round's gradient is neither applied nor
         banked — every worker reuses the cached aggregate and NO state
@@ -268,55 +278,126 @@ class CompositeCompressor(GradCompressor):
         staleness). The innovation the skip forfeits is bounded by the
         threshold; a fired round's compression residual still carries
         through ``err`` exactly as in the eager path.
+
+        ``cfg.lazy_mode`` picks the dispatch. ``"elide"`` (default) routes
+        the handler sync through ``lax.cond`` on the fire predicate — safe
+        because :func:`repro.core.lazy.group_decision` makes the predicate
+        a pure function of one fused psum (worker-uniform by construction)
+        — so under shard_map a skipped round never launches the group's
+        collectives. ``"gate"`` traces them unconditionally and selects
+        with ``jnp.where``. Both modes are bit-identical: the cond's
+        branches cast every output to exactly the dtype ``jnp.where``
+        promotion produces, and the fire branch's static wire accounting
+        comes from a ``jax.eval_shape`` probe running the same Python
+        accounting the gate path records.
         """
         sd = jnp.dtype(self.cfg.state_dtype)
+        f32 = jnp.float32
         h = self.handlers[m]
         xs, items = [], []
         for i in idxs:
             g = leaves[i]
             # the innovation variable is the update compression would see:
             # error-corrected for EF leaves, the raw gradient otherwise
-            x = g.astype(jnp.float32)
+            x = g.astype(f32)
             if self._has_err(i, state):
-                x = x + state["err"][str(i)].astype(jnp.float32)
+                x = x + state["err"][str(i)].astype(f32)
             xs.append(x)
             items.append((i, g, self.plans[i]))
+        # adaptive LAQ: the drift EMA scales this round's thresholds; it
+        # is threaded state (worker-identical, no collectives), so the
+        # scaled predicate stays uniform by construction
+        a_cap = lazy_mod.group_adaptive_cap(self.plans, idxs)
         dec = lazy_mod.group_decision(
             xs, [state[lazy_mod.REF_NS][str(i)] for i in idxs],
             [self.plans[i].policy.lazy_thresh for i in idxs],
             state[lazy_mod.STALE_NS][m],
             lazy_mod.group_max_stale(self.plans, idxs),
-            comm, rec, force=warm)
-        sub = CommRecord()
-        o, upd = h.sync_group(items, state, comm, sub)
-        rec.add_gated(sub.bits_sent, sub.n_collectives, dec.fire)
-        # handler state (error feedback, warm Q, ...) advances only on a
-        # fired round — a skip leaves the group's state untouched
-        for ns, subd in upd.items():
-            for k in list(subd):
-                if k in state.get(ns, {}):
-                    subd[k] = dec.select(subd[k], state[ns][k])
+            comm, rec, force=warm,
+            tau_scale2=(lazy_mod.tau_scale2(state[lazy_mod.EMA_NS][m], a_cap)
+                        if a_cap > 0 else None))
+
+        def run_group(sub: CommRecord):
+            o, upd = h.sync_group(items, state, comm, sub)
+            return [o[i].astype(f32) for i in idxs], upd
+
+        if self.cfg.lazy_mode == "gate":
+            sub = CommRecord()
+            o_list, upd = run_group(sub)
+            rec.add_gated(sub.bits_sent, sub.n_collectives, dec.fire)
+            # handler state (error feedback, warm Q, ...) advances only on
+            # a fired round — a skip leaves the group's state untouched
+            for ns, subd in upd.items():
+                for k in list(subd):
+                    if k in state.get(ns, {}):
+                        subd[k] = dec.select(subd[k], state[ns][k])
+            sel_outs = [
+                dec.select(o_list[j],
+                           state[lazy_mod.OUT_NS][str(i)].astype(f32))
+                for j, i in enumerate(idxs)]
+        else:
+            # abstract-eval probe: fire-branch avals for dtype matching +
+            # the branch's static wire accounting, with zero ops added to
+            # the traced graph
+            probe = CommRecord()
+            _, upd_avals = jax.eval_shape(lambda: run_group(probe))
+            rec.add_gated(probe.bits_sent, probe.n_collectives, dec.fire)
+            for ns, subd in upd_avals.items():
+                missing = [k for k in subd if k not in state.get(ns, {})]
+                if missing:
+                    raise ValueError(
+                        f"lazy_mode='elide' needs every handler update to "
+                        f"have a cached slot for the skip branch; "
+                        f"{ns!r} keys {missing} are not in the threaded "
+                        f"state (use lazy_mode='gate' for this handler)")
+            # cast both branches to the dtypes jnp.where promotion would
+            # produce, so gate and elide stay bit-identical in every
+            # dtype config (e.g. bfloat16 state_dtype)
+            rts = {ns: {k: jnp.result_type(v.dtype, state[ns][k].dtype)
+                        for k, v in subd.items()}
+                   for ns, subd in upd_avals.items()}
+
+            def fire_branch(_):
+                o_list, upd = run_group(CommRecord())
+                return o_list, {
+                    ns: {k: v.astype(rts[ns][k]) for k, v in subd.items()}
+                    for ns, subd in upd.items()}
+
+            def skip_branch(_):
+                o_list = [state[lazy_mod.OUT_NS][str(i)].astype(f32)
+                          for i in idxs]
+                return o_list, {
+                    ns: {k: state[ns][k].astype(rts[ns][k]) for k in subd}
+                    for ns, subd in upd_avals.items()}
+
+            sel_outs, upd = jax.lax.cond(dec.fire, fire_branch,
+                                         skip_branch, None)
         outs: dict[int, jax.Array] = {}
         new_out, new_ref = {}, {}
-        for i, x in zip(idxs, xs):
+        for i, x, sel in zip(idxs, xs, sel_outs):
             k = str(i)
-            fresh = o[i].astype(jnp.float32)
-            sel = dec.select(fresh, state[lazy_mod.OUT_NS][k]
-                             .astype(jnp.float32))
             outs[i] = sel.astype(leaves[i].dtype)
             new_out[k] = sel.astype(sd)
             new_ref[k] = dec.select(
-                x, state[lazy_mod.REF_NS][k].astype(jnp.float32)).astype(sd)
+                x, state[lazy_mod.REF_NS][k].astype(f32)).astype(sd)
         upd[lazy_mod.OUT_NS] = new_out
         upd[lazy_mod.REF_NS] = new_ref
         upd[lazy_mod.STALE_NS] = {m: dec.new_stale}
+        if a_cap > 0:
+            # drift proxy: squared magnitude of the group's applied
+            # aggregate (worker-identical); advances only on a fire
+            drift = sum(jnp.sum(jnp.square(s)) for s in sel_outs)
+            upd[lazy_mod.EMA_NS] = {m: lazy_mod.ema_update(
+                state[lazy_mod.EMA_NS][m], drift, dec.fire)}
         return outs, upd
 
     # ---- static accounting -----------------------------------------------
     def decision_bits_per_step(self) -> int:
         """Skip-decision sideband (fires every round): one fused psum of
-        innovation + norm scalars per lazy group."""
+        innovation + norm scalars per lazy group, plus the group's
+        force-vote slot (what makes the predicate worker-uniform)."""
         return sum(lazy_mod.DECISION_BITS_PER_LEAF * len(lz)
+                   + lazy_mod.DECISION_BITS_PER_GROUP
                    for lz in self.lazy_groups.values())
 
     def wire_bits_per_step(self) -> int:
@@ -370,7 +451,9 @@ class CompositeCompressor(GradCompressor):
             m = pl.policy.method
             out[m] = out.get(m, 0) + self.handlers[m].leaf_wire_bits(pl)
         for m, lz in self.lazy_groups.items():
-            out[m] = out.get(m, 0) + lazy_mod.DECISION_BITS_PER_LEAF * len(lz)
+            out[m] = (out.get(m, 0)
+                      + lazy_mod.DECISION_BITS_PER_LEAF * len(lz)
+                      + lazy_mod.DECISION_BITS_PER_GROUP)
         return out
 
     # ---- decay phases ----------------------------------------------------

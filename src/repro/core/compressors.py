@@ -115,6 +115,16 @@ class CompressorConfig:
     # max consecutive skipped rounds before a fire is forced (>= 1 when
     # lazy_thresh > 0 — no group may silently freeze)
     max_stale: int = 4
+    # skip-round dispatch: 'elide' routes each lazy group's handler sync
+    # through lax.cond on the (worker-uniform) fire predicate so a skipped
+    # round's collectives are absent from the compiled program; 'gate' is
+    # the legacy trace-always, where-select path (bit-identical — kept as
+    # the benchmark baseline)
+    lazy_mode: str = "elide"
+    # adaptive LAQ: > 0 caps the threshold scaling driven by the
+    # parameter-drift EMA (tau_eff^2 <= lazy_adaptive * tau^2); 0 = fixed
+    # thresholds
+    lazy_adaptive: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,6 +143,9 @@ class LeafPolicy:
     # (0.0 = eager) and the max consecutive skips before a forced fire
     lazy_thresh: float = 0.0
     max_stale: int = 4
+    # adaptive LAQ: cap on the drift-EMA threshold scaling (tau_eff^2 <=
+    # lazy_adaptive * tau^2); 0.0 = fixed thresholds, otherwise >= 1
+    lazy_adaptive: float = 0.0
 
     def __post_init__(self):
         if self.method not in POLICY_METHODS:
@@ -144,6 +157,10 @@ class LeafPolicy:
             raise ValueError(
                 f"lazy_thresh > 0 needs max_stale >= 1 (a staleness cap so "
                 f"no group silently freezes), got max_stale={self.max_stale}")
+        if self.lazy_adaptive != 0 and self.lazy_adaptive < 1:
+            raise ValueError(
+                f"lazy_adaptive is a scaling CAP: 0 (off) or >= 1, got "
+                f"{self.lazy_adaptive}")
 
     @property
     def eff_bits_q(self) -> int:

@@ -26,8 +26,16 @@ The criterion, per lazy leaf ``i`` with policy threshold ``tau_i``:
 where ``ref_i`` is ``x_i`` at the group's last fired round. The group
 fires when ANY leaf votes, when ``stale >= max_stale`` (the cap below),
 or during schedule warm-up. All per-leaf statistics ship in ONE fused
-psum (64 bits/leaf of sideband — charged to the CommRecord statically;
-the decision traffic is the price of laziness and is never skippable).
+psum, together with a single extra slot carrying the group's force votes
+(staleness cap + warm-up) — 64 bits/leaf + 32 bits/group of sideband,
+charged to the CommRecord statically; the decision traffic is the price
+of laziness and is never skippable. Folding the force votes into the
+psum makes ``fire`` a pure function of one globally-reduced vector, so
+the predicate is worker-uniform BY CONSTRUCTION: even a worker whose
+local state drifted reads the same reduced statistics as its peers.
+That uniformity is what licenses dispatching the group's collectives
+through ``lax.cond`` on the predicate (below) — a non-uniform predicate
+would deadlock a real mesh with half the workers inside a collective.
 
 Skip semantics under error feedback — LAQ-faithful: on a skipped round
 NOTHING advances except the staleness counter. Every worker applies the
@@ -48,6 +56,16 @@ begins at ``lazy_thresh`` above ``sqrt(2)`` — LAQ's analysis assumes
 deterministic per-worker gradients; thresholds here are relative and the
 sweep in ``benchmarks/lazy_sweep.py`` maps the knee empirically.
 
+Adaptive thresholds (the ``lazy_adaptive`` policy knob, > 0 = scaling
+cap): each group tracks an EMA of its applied aggregate's squared
+magnitude — a collective-free, worker-identical drift proxy — and scales
+every member's squared threshold by ``clip(peak / ema, 1, cap)`` where
+``peak`` is the running maximum of the smoothed drift. While updates run
+near their peak the ratio sits at ~1 (thresholds at their configured
+value); as the run converges the ratio grows and the group skips more
+aggressively, reproducing LAQ's ramping skip rate without retuning
+``lazy_thresh`` per run.
+
 State (merged into the composite's threaded pytree, param-shaped
 namespaces shard like the parameter):
 
@@ -55,17 +73,32 @@ namespaces shard like the parameter):
     lazy_ref[i]   x at the last fired round (per-worker, param-shaped)
     lazy_stale[m] consecutive-skip counter per method group (int32),
                   initialized AT the cap so the first round always fires
+    lazy_ema[m]   adaptive-threshold drift tracker [ema, peak] (f32[2];
+                  only when the group opted into ``lazy_adaptive``)
 
-Like the schedule warm-up's fp32 shadow, the traced graph still contains
-the group's collectives on every step — XLA cannot drop a collective on a
-traced predicate — so a skipped round *executes* gated collectives whose
-results are discarded. What the wire *semantically* carries is tracked by
-the CommRecord's dynamic tier (:meth:`~repro.core.comm.CommRecord.
+Fire/skip is *graph-level* (``lazy_mode="elide"``, the default): the
+composite dispatches the group's handler sync through a ``lax.cond`` on
+the fire predicate, so the group's all-gathers and scale pmaxes are
+emitted only inside the cond's true branch — under the production
+fully-manual shard_map a skipped round never launches them, and the
+only collective it executes is the decision psum itself. The legacy
+``lazy_mode="gate"`` path traces the collectives unconditionally and
+selects results with ``jnp.where`` (a skipped round still executes the
+full collective set and discards it). The two modes are bit-identical:
+both branches cast to exactly the dtypes ``jnp.where`` promotion would
+produce, and under ``jax.vmap`` collective semantics — the unit-test
+harness — a batched predicate lowers the cond to select-over-both-
+branches, i.e. precisely the gate. Elision manifests only under
+shard_map, where ``tests/test_elision.py`` pins the structure: the
+group's collectives appear only in the cond's true branch, the decision
+psum stays unconditional, and the compiled HLO keeps the conditional.
+
+Either way, what the wire *semantically* carries is tracked by the
+CommRecord's dynamic tier (:meth:`~repro.core.comm.CommRecord.
 add_gated`): ``effective_bits`` / ``effective_collectives`` report the
-decision sideband plus the gate-weighted group payload, which is what the
-train metrics, ``benchmarks/lazy_sweep.py`` and the planner's
-``p_fire * wire_bits`` cost model account. (Graph-level skipping via
-``lax.cond`` under fully-manual shard_map is a ROADMAP open item.)
+decision sideband plus the gate-weighted group payload, which is what
+the train metrics, ``benchmarks/lazy_sweep.py`` and the planner's
+``p_fire * wire_bits`` cost model account.
 """
 from __future__ import annotations
 
@@ -79,23 +112,35 @@ from repro.core.comm import AxisComm, CommRecord
 from repro.core.compressors import LeafPlan
 
 __all__ = [
+    "ADAPTIVE_BETA",
+    "DECISION_BITS_PER_GROUP",
     "DECISION_BITS_PER_LEAF",
     "LazyDecision",
+    "ema_update",
+    "group_adaptive_cap",
     "group_decision",
     "group_max_stale",
     "lazy_subset",
     "p_fire",
     "staleness_err",
+    "tau_scale2",
 ]
 
 PyTree = Any
 
 # innovation + norm, fp32 each, per lazy leaf on the fused decision psum
 DECISION_BITS_PER_LEAF = 64
+# one extra fp32 slot per group carrying the force votes (staleness cap +
+# warm-up), so `fire` is a pure function of the psum output
+DECISION_BITS_PER_GROUP = 32
 
 # namespaces the lazy machinery adds to the composite state
 OUT_NS, REF_NS, STALE_NS = "lazy_out", "lazy_ref", "lazy_stale"
+EMA_NS = "lazy_ema"
 PARAM_SHAPED_NS = (OUT_NS, REF_NS)
+
+# adaptive-LAQ drift tracker smoothing (per fired round)
+ADAPTIVE_BETA = 0.9
 
 
 def lazy_subset(plans: Sequence[LeafPlan], idxs: Sequence[int]) -> list[int]:
@@ -106,6 +151,47 @@ def lazy_subset(plans: Sequence[LeafPlan], idxs: Sequence[int]) -> list[int]:
 def group_max_stale(plans: Sequence[LeafPlan], idxs: Sequence[int]) -> int:
     """The group's staleness cap: the tightest of its members' caps."""
     return min(plans[i].policy.max_stale for i in idxs)
+
+
+def group_adaptive_cap(plans: Sequence[LeafPlan], idxs: Sequence[int]
+                       ) -> float:
+    """The group's adaptive-LAQ scaling cap: the tightest of its members'
+    opted-in caps (0.0 = no member opted in, fixed thresholds)."""
+    caps = [plans[i].policy.lazy_adaptive for i in idxs
+            if plans[i].policy.lazy_adaptive > 0]
+    return min(caps) if caps else 0.0
+
+
+def tau_scale2(ema: jax.Array, cap: float) -> jax.Array:
+    """Adaptive threshold scaling from the drift tracker ``[ema, peak]``:
+    ``tau_eff^2 = tau^2 * clip(peak / ema, 1, cap)``. The tracker follows
+    the squared magnitude of the group's applied aggregate, so while the
+    run is at full steam the current drift sits near its running peak
+    (scale ~ 1, thresholds at their configured value); as the run
+    converges and updates shrink below that peak, the effective threshold
+    rises and the skip rate ramps up — LAQ's adaptive criterion,
+    scale-free by construction (a global gradient rescale cancels in the
+    ratio). Before the first fired round (``ema == 0``) the scale is 1."""
+    e, peak = ema[0], ema[1]
+    ratio = jnp.where(e > 0, peak / jnp.maximum(e, 1e-30), 1.0)
+    return jnp.clip(ratio, 1.0, cap)
+
+
+def ema_update(ema: jax.Array, drift: jax.Array, fire: jax.Array
+               ) -> jax.Array:
+    """Advance the ``[ema, peak]`` drift tracker on a fired round (frozen
+    on a skip — the cached aggregate carries no new information). ``peak``
+    is the running maximum of the SMOOTHED drift, so a single noisy round
+    cannot inflate the baseline; tracking the peak rather than latching
+    the first round keeps the ratio well-behaved through compression
+    cold-start, where round 0's aggregate (empty error feedback, cold
+    low-rank factors) undershoots the steady-state magnitude."""
+    e, peak = ema[0], ema[1]
+    d = drift.astype(jnp.float32)
+    first = peak <= 0
+    new_e = jnp.where(first, d, ADAPTIVE_BETA * e + (1 - ADAPTIVE_BETA) * d)
+    new_peak = jnp.maximum(peak, new_e)
+    return jnp.where(fire, jnp.stack([new_e, new_peak]), ema)
 
 
 @dataclasses.dataclass
@@ -123,25 +209,40 @@ class LazyDecision:
 def group_decision(xs: Sequence[jax.Array], refs: Sequence[jax.Array],
                    threshs: Sequence[float], stale: jax.Array,
                    max_stale: int, comm: AxisComm, rec: CommRecord, *,
-                   force: jax.Array | None = None) -> LazyDecision:
+                   force: jax.Array | None = None,
+                   tau_scale2: jax.Array | None = None) -> LazyDecision:
     """The collective skip test for one leaf group.
 
     ``xs`` are the error-corrected updates compression would see this
     round, ``refs`` the per-worker references from the last fired round.
-    Charges the fused decision psum (64 bits/leaf, 1 collective) to
-    ``rec``'s static tier — it fires every round by construction.
+    The staleness-cap and warm-up force votes ride the SAME fused psum as
+    the innovation statistics (one extra f32 slot), so the returned
+    ``fire`` is a pure function of a single globally-reduced vector —
+    worker-uniform by construction, which is what licenses dispatching
+    the group's collectives through ``lax.cond`` on it. Charges the psum
+    (64 bits/leaf + 32 bits/group, 1 collective) to ``rec``'s static
+    tier — it fires every round by construction.
+
+    ``tau_scale2`` (traced scalar, optional) multiplies every squared
+    threshold — the adaptive-LAQ hook (the composite feeds the inverse
+    of its parameter-drift EMA here, so thresholds rise as the run
+    converges and the skip rate ramps up).
     """
     innov = [jnp.sum(jnp.square(x - r.astype(jnp.float32)))
              for x, r in zip(xs, refs)]
     norms = [jnp.sum(jnp.square(x)) for x in xs]
-    stats = comm.psum(jnp.stack(innov + norms))
-    rec.add(DECISION_BITS_PER_LEAF * len(xs), 1)
+    forced = stale >= max_stale
+    if force is not None:
+        forced = forced | force
+    stats = comm.psum(jnp.stack(innov + norms
+                                + [forced.astype(jnp.float32)]))
+    rec.add(DECISION_BITS_PER_LEAF * len(xs) + DECISION_BITS_PER_GROUP, 1)
     n = len(xs)
     taus = jnp.asarray([t * t for t in threshs], jnp.float32)
-    votes = stats[:n] > taus * stats[n:]
-    fire = jnp.any(votes) | (stale >= max_stale)
-    if force is not None:
-        fire = fire | force
+    if tau_scale2 is not None:
+        taus = taus * tau_scale2
+    votes = stats[:n] > taus * stats[n:2 * n]
+    fire = jnp.any(votes) | (stats[2 * n] > 0)
     new_stale = jnp.where(fire, jnp.zeros_like(stale), stale + 1)
     return LazyDecision(fire=fire, stale=stale, new_stale=new_stale)
 

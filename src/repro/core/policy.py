@@ -76,6 +76,7 @@ _POLICY_KNOBS = {
     "min_numel": int,
     "lazy_thresh": float,
     "max_stale": int,
+    "lazy_adaptive": float,
 }
 
 
@@ -83,7 +84,8 @@ def uniform_policy(cfg: CompressorConfig) -> LeafPolicy:
     method = _NAME_ALIASES.get(cfg.name, cfg.name)
     return LeafPolicy(method=method, rank=cfg.rank, bits=cfg.bits,
                       bits_q=cfg.bits_q, topk_ratio=cfg.topk_ratio,
-                      lazy_thresh=cfg.lazy_thresh, max_stale=cfg.max_stale)
+                      lazy_thresh=cfg.lazy_thresh, max_stale=cfg.max_stale,
+                      lazy_adaptive=cfg.lazy_adaptive)
 
 
 # --------------------------------------------------------------------------
@@ -191,13 +193,18 @@ class CostModel:
         return self.wire_s(wire_bits) + self.flops_s(flops)
 
     def expected_wire_bits(self, pol: LeafPolicy, wire_bits: int) -> float:
-        """p_fire-weighted wire of one leaf: the compute graph always runs
-        (in-graph gating), but the wire only carries the payload on a fired
-        round, plus 64 bits/round of decision sideband."""
+        """p_fire-weighted wire of one leaf: the wire only carries the
+        payload on a fired round, plus 64 bits/round of decision sideband.
+        An adaptive policy (``lazy_adaptive`` cap > 1) is costed at its
+        mid-run effective threshold ``tau * sqrt((1 + cap) / 2)`` — the
+        drift EMA ramps the scale from 1 toward the cap over the run."""
         from repro.core.lazy import DECISION_BITS_PER_LEAF, p_fire
         if pol.lazy_thresh <= 0:
             return float(wire_bits)
-        p = p_fire(pol.lazy_thresh, pol.max_stale, self.innovation_rate)
+        t = pol.lazy_thresh
+        if pol.lazy_adaptive > 1:
+            t = t * ((1.0 + pol.lazy_adaptive) / 2.0) ** 0.5
+        p = p_fire(t, pol.max_stale, self.innovation_rate)
         return p * wire_bits + DECISION_BITS_PER_LEAF
 
 
@@ -225,7 +232,8 @@ def _quant_err(bits: int) -> float:
 
 def _candidates(pl, numel: int, cm: CostModel, *,
                 ranks, bits_options, topk_ratios, qsgd_bits,
-                lazy_options: Sequence[tuple[float, int]] = ()
+                lazy_options: Sequence[tuple[float, int]] = (),
+                lazy_adaptive: float = 0.0
                 ) -> list[tuple[LeafPolicy, float]]:
     """(policy, error-proxy) candidates for one leaf; the caller attaches
     wire bits via the real handler accounting.
@@ -271,7 +279,8 @@ def _candidates(pl, numel: int, cm: CostModel, *,
                     continue
                 lazy_variants.append((
                     dataclasses.replace(pol, lazy_thresh=thresh,
-                                        max_stale=stale),
+                                        max_stale=stale,
+                                        lazy_adaptive=lazy_adaptive),
                     err + staleness_err(thresh, stale, cm.innovation_rate)))
         out.extend(lazy_variants)
     return out
@@ -311,7 +320,8 @@ def plan_auto(abstract_grads: PyTree, stacked: PyTree | None = None, *,
     sideband, with the staleness penalty added to its error proxy.
     """
     from repro.core.composite import handler_for
-    from repro.core.lazy import DECISION_BITS_PER_LEAF, p_fire
+    from repro.core.lazy import (DECISION_BITS_PER_GROUP,
+                                 DECISION_BITS_PER_LEAF, p_fire)
     cfg = cfg or CompressorConfig()
     budget = cfg.error_budget if error_budget is None else error_budget
     cm = cost_model or CostModel()
@@ -347,7 +357,8 @@ def plan_auto(abstract_grads: PyTree, stacked: PyTree | None = None, *,
                                     bits_options=bits_options,
                                     topk_ratios=topk_ratios,
                                     qsgd_bits=qsgd_bits,
-                                    lazy_options=lazy_options):
+                                    lazy_options=lazy_options,
+                                    lazy_adaptive=cfg.lazy_adaptive):
             if err > budget:
                 continue
             fired_bits, pl = wire_bits(pol, path, leaf, st)
@@ -371,12 +382,21 @@ def plan_auto(abstract_grads: PyTree, stacked: PyTree | None = None, *,
             "method": pol.method, "rank": pol.rank, "bits": pol.bits,
             "topk_ratio": pol.topk_ratio,
             "lazy_thresh": pol.lazy_thresh, "max_stale": pol.max_stale,
+            "lazy_adaptive": pol.lazy_adaptive,
             "p_fire": p_fire(pol.lazy_thresh, pol.max_stale,
                              cm.innovation_rate) if pol.lazy_thresh > 0
             else 1.0,
             "wire_bits": best[2], "est_err": best[3],
             "est_cost_us": cost * 1e6, "raw_bits": numel * 32,
         })
+    # each lazy method group's decision psum carries one extra force-vote
+    # slot; attach it to the method's first lazy leaf so the report's wire
+    # sum stays equal to the composite's wire_bits_per_step()
+    seen_lazy: set[str] = set()
+    for pol, row in zip(policies, report):
+        if pol.lazy_thresh > 0 and pol.method not in seen_lazy:
+            seen_lazy.add(pol.method)
+            row["wire_bits"] += DECISION_BITS_PER_GROUP
     return policies, report
 
 

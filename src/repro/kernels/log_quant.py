@@ -20,7 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["log_quantize_pallas", "log_dequantize_pallas", "pack_nibbles_pallas"]
+__all__ = ["log_quantize_pallas", "log_dequantize_pallas",
+           "log_quantize_pack_pallas", "pack_nibbles_pallas"]
 
 
 def _quantize_kernel(x_ref, scale_ref, o_ref, *, alpha: float, levels: int):
@@ -123,6 +124,67 @@ def pack_nibbles_pallas(codes: jax.Array, *, block: tuple[int, int] = (256, 512)
         interpret=interpret,
     )(lo2, hi2)
     return _unpad(y2, shape, n)
+
+
+def _quantize_pack_kernel(x_ref, scale_ref, o_ref, *, alpha: float,
+                          levels: int):
+    """Fused normalize -> log-quantize -> nibble-pack, one VMEM pass.
+
+    The input block is (bm, bn) float; adjacent column pairs (2c, 2c+1)
+    are adjacent FLAT elements (bn is even, so pairs never straddle rows
+    or block boundaries), packed into the (bm, bn//2) int8 output block.
+    Keeping the pair split in-kernel removes the XLA interleave
+    (two strided gathers + a second kernel launch) between the separate
+    quantize and pack calls — the codes never round-trip through HBM."""
+    x = x_ref[...].astype(jnp.float32)
+    s = scale_ref[0, 0]
+    safe = jnp.where(s > 0.0, s, 1.0)
+    y = x / safe
+    q = jnp.sign(y) * jnp.log1p(alpha * jnp.abs(y)) / jnp.log1p(alpha)
+    codes = jnp.clip(jnp.round(q * levels), -levels, levels).astype(jnp.int32)
+    pairs = codes.reshape(codes.shape[0], -1, 2)
+    lo, hi = pairs[..., 0], pairs[..., 1]
+    o_ref[...] = ((lo & 0xF) | ((hi & 0xF) << 4)).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "alpha", "block",
+                                             "interpret"))
+def log_quantize_pack_pallas(x: jax.Array, scale: jax.Array, *,
+                             bits: int = 4, alpha: float = 10.0,
+                             block: tuple[int, int] = (256, 512),
+                             interpret: bool = True) -> jax.Array:
+    """x (any shape), scale scalar -> packed nibble bytes, ONE pallas_call.
+
+    Fuses ``log_quantize_pallas`` + ``pack_nibbles_pallas`` for the b <= 4
+    wire: byte ``i`` holds ``codes[2i]`` (low nibble) and ``codes[2i+1]``
+    (high nibble) of the flattened input, identical to the jnp reference
+    packer in ``repro.core.codec`` (pad elements quantize to code 0, the
+    reference's pad byte). Output is 1-D of length ``ceil(x.size / 2)``.
+    """
+    if bits > 4:
+        raise ValueError(f"nibble pack needs bits <= 4, got {bits}")
+    if block[1] % 2:
+        raise ValueError(f"block cols must be even, got {block}")
+    levels = (1 << (bits - 1)) - 1
+    x2, _, n = _pad2d(x, block)
+    rows, cols = x2.shape
+    grid = (rows // block[0], cols // block[1])
+    scale2 = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    kernel = functools.partial(_quantize_pack_kernel, alpha=alpha,
+                               levels=levels)
+    y2 = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(block, lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0), memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((block[0], block[1] // 2),
+                               lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols // 2), jnp.int8),
+        interpret=interpret,
+    )(x2, scale2)
+    return _unpad(y2, (-(-n // 2),), -(-n // 2))
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "alpha", "block", "interpret"))

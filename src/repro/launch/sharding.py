@@ -17,7 +17,7 @@ from typing import Any
 import jax
 from jax.sharding import PartitionSpec as P
 
-__all__ = ["param_specs", "batch_spec", "MODEL_AXIS"]
+__all__ = ["param_specs", "batch_spec", "assert_replicated", "MODEL_AXIS"]
 
 MODEL_AXIS = "model"
 
@@ -121,3 +121,21 @@ def param_specs(abstract_params: Any, stacked: Any | None = None,
 def batch_spec(dp_axes: tuple[str, ...], extra_dims: int = 1) -> P:
     """Tokens (B, S[, cb]) sharded over DP axes on batch."""
     return P(dp_axes, *([None] * extra_dims))
+
+
+def assert_replicated(specs: Any, what: str) -> None:
+    """Raise unless every PartitionSpec in ``specs`` is fully replicated.
+
+    For values that feed worker-uniform control flow — the lazy-aggregation
+    fire predicate's staleness counters (:mod:`repro.core.lazy`): a sharded
+    spec would let the ``lax.cond`` branch choice diverge across the mesh,
+    which deadlocks a real backend with part of the workers inside a
+    collective. Assert the derived sharding, don't assume it.
+    """
+    flat = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
+    for kp, spec in flat:
+        if any(a is not None for a in spec):
+            raise AssertionError(
+                f"{what}{jax.tree_util.keystr(kp)}: spec {spec} is not "
+                f"replicated — worker-uniform control flow would diverge")

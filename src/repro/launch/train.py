@@ -72,6 +72,17 @@ def main() -> None:
     ap.add_argument("--max-stale", type=int, default=4,
                     help="lazy aggregation: max consecutive skipped rounds "
                          "before a fire is forced")
+    ap.add_argument("--lazy-adaptive", type=float, default=0.0,
+                    help="adaptive LAQ: cap on the drift-EMA threshold "
+                         "scaling — thresholds ramp up (skips ramp up) as "
+                         "the run converges, up to sqrt(cap) * lazy-thresh "
+                         "(0 = fixed thresholds, otherwise >= 1)")
+    ap.add_argument("--lazy-mode", default="elide",
+                    choices=["elide", "gate"],
+                    help="skip-round dispatch: 'elide' removes a skipped "
+                         "round's collectives from the compiled graph via "
+                         "lax.cond; 'gate' traces them every round and "
+                         "discards skipped results (legacy baseline)")
     ap.add_argument("--rank", type=int, default=1)
     ap.add_argument("--bits", type=int, default=8)
     ap.add_argument("--alpha", type=float, default=10.0)
@@ -123,7 +134,9 @@ def main() -> None:
                                 warmup_steps=args.warmup,
                                 schedule_decay=decay,
                                 lazy_thresh=args.lazy_thresh,
-                                max_stale=args.max_stale)
+                                max_stale=args.max_stale,
+                                lazy_adaptive=args.lazy_adaptive,
+                                lazy_mode=args.lazy_mode)
     compressor = make_model_compressor(cfg, comp_cfg)
     if getattr(compressor, "plan_report", None):
         from repro.core.policy import format_plan_report

@@ -25,7 +25,8 @@ from repro.configs.base import ModelConfig
 from repro.core import AxisComm, CompressorConfig, make_compressor
 from repro.core.comm import shard_map
 from repro.core.compressors import GradCompressor
-from repro.launch.sharding import param_specs
+from repro.core.lazy import STALE_NS
+from repro.launch.sharding import assert_replicated, param_specs
 from repro.models.model import init_params, stacked_flags
 from repro.train.loss import lm_loss
 from repro.train.optimizer import Optimizer
@@ -192,6 +193,12 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, compressor: GradCompressor,
         comp_inner = jax.tree.map(lambda x: jax.ShapeDtypeStruct(
             x.shape[1:], x.dtype), state_abstract["comp"])
         comp_specs = compressor.state_pspecs(comp_inner, pspecs, dp)
+        # the lazy fire predicate dispatches lax.cond under the manual DP
+        # axes; its only un-psummed input is the per-group staleness
+        # counter, whose derived spec must replicate over the auto model
+        # axis — a sharded counter could diverge the branch choice
+        if STALE_NS in comp_specs:
+            assert_replicated(comp_specs[STALE_NS], f"comp.{STALE_NS}")
         return dict(
             params=jax.tree.map(ns, pspecs),
             opt=jax.tree.map(lambda _: ns(P()), state_abstract["opt"]),

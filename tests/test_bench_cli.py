@@ -1,6 +1,9 @@
 """benchmarks.run CLI contract: an unknown --only section must exit
 non-zero (a typo'd section name once ran zero sections and left CI
-green), and the registry itself is the single source of truth."""
+green), and the registry itself is the single source of truth. Plus the
+check_regression self-invariants that need no real bench run: the
+adaptive-LAQ gate and the BENCH_history.jsonl time-series append."""
+import json
 import os
 import subprocess
 import sys
@@ -27,3 +30,49 @@ def test_known_only_section_runs():
     out = _run_cli("--only", "comm_cost")
     assert out.returncode == 0, out.stderr[-2000:]
     assert "comm_cost/CIFAR-10/lq_sgd" in out.stdout
+
+
+def _fresh_payloads(tmp_path, cr, *, ramps_down=True, in_band=True):
+    cc = {"lazy_sweep": {
+        "gate": {"passed": True},
+        "adaptive": {"ramps_down": ramps_down, "acc_within_band": in_band,
+                     "fire_rate_windows": [1.0, 0.5, 0.1],
+                     "fixed_fire_rate": 1.0, "acc": 1.0, "fixed_acc": 1.0},
+    }}
+    st = {"speedup_async_vs_sync": 1.2,
+          "lazy_elision": {"speedup_elide_vs_gate": 1.15,
+                           "speedup_elide_vs_eager": 0.95,
+                           "steps_per_s": {"eager": 60.0, "lazy_gate": 50.0,
+                                           "lazy_elide": 58.0}}}
+    (tmp_path / cr.CC).write_text(json.dumps(cc))
+    (tmp_path / cr.ST).write_text(json.dumps(st))
+
+
+def test_adaptive_gate_is_hard(tmp_path):
+    from benchmarks import check_regression as cr
+    _fresh_payloads(tmp_path, cr)
+    assert cr.check_lazy_gate(str(tmp_path)) == []
+    _fresh_payloads(tmp_path, cr, ramps_down=False)
+    msgs = cr.check_lazy_gate(str(tmp_path))
+    assert msgs and all(m.startswith("HARD") for m in msgs)
+    assert any("ramp" in m for m in msgs)
+    _fresh_payloads(tmp_path, cr, in_band=False)
+    assert any("accuracy" in m for m in cr.check_lazy_gate(str(tmp_path)))
+
+
+def test_history_append(tmp_path):
+    from benchmarks import check_regression as cr
+    _fresh_payloads(tmp_path, cr)
+    hist = tmp_path / "history.jsonl"
+    p1 = cr.append_history(str(tmp_path), label="abc123", path=str(hist))
+    p2 = cr.append_history(str(tmp_path), path=str(hist))
+    key = f"{cr.ST}:lazy_elision.speedup_elide_vs_gate"
+    assert p1["metrics"][key] == 1.15
+    assert f"{cr.ST}:lazy_elision.steps_per_s.eager" in p1["metrics"]
+    assert (f"{cr.CC}:lazy_sweep.adaptive.fire_rate_windows.0"
+            in p1["metrics"])
+    lines = [json.loads(l) for l in hist.read_text().splitlines()]
+    assert len(lines) == 2  # appends, never truncates
+    assert lines[0]["label"] == "abc123" and lines[1]["label"] is None
+    assert lines[0]["metrics"] == p1["metrics"] == p2["metrics"]
+    assert "ts" in lines[0]

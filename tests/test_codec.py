@@ -171,24 +171,29 @@ def test_fused_unfused_bit_identical_b4(name):
 
 # ------------------------------------------------- collective counts
 @pytest.mark.parametrize("name", ["powersgd", "lq_sgd"])
-def test_fused_collective_count_is_2_plus_nraw(name):
-    """One collective per power-iteration phase + one per raw leaf."""
+def test_fused_collective_count(name):
+    """One gather per power-iteration phase + one per raw leaf, plus the
+    scale sideband where the codec carries one: PowerSGD's fp32 factor wire
+    has no scales; LQ-SGD adds one fused pmax per phase and each of its
+    quantized raw leaves runs its own pmax + gather."""
     grads = _grads(jax.random.PRNGKey(22))
     recs = []
     comp, _, _ = _sync(name, grads, fuse_collectives=True, collect_recs=recs)
     n_raw = sum(1 for pl in comp.plans if pl.route != "lowrank")
     assert n_raw == 1  # 'b' is the only raw leaf in this fixture
-    assert recs[0].n_collectives == 2 + n_raw
+    expect = {"powersgd": 2 + n_raw, "lq_sgd": 2 * 2 + 2 * n_raw}[name]
+    assert recs[0].n_collectives == expect
 
 
 def test_unfused_collective_count(name="lq_sgd"):
-    """Unfused: one per compressed tensor per phase + one per raw leaf."""
+    """Unfused: one scale pmax + one gather per compressed tensor per
+    phase, and the same pair per quantized raw leaf."""
     grads = _grads(jax.random.PRNGKey(23))
     recs = []
     comp, _, _ = _sync(name, grads, collect_recs=recs)
     n_comp = sum(1 for pl in comp.plans if pl.route == "lowrank")
     n_raw = len(comp.plans) - n_comp
-    assert recs[0].n_collectives == 2 * n_comp + n_raw
+    assert recs[0].n_collectives == 2 * 2 * n_comp + 2 * n_raw
 
 
 # ------------------------------------------------- packed-wire accounting

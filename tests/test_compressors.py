@@ -296,5 +296,6 @@ def test_fused_collectives_count():
         return out, st2
 
     jax.vmap(worker, axis_name="data")(grads, state)
-    # 2 fused factor gathers + 1 per raw leaf ('b' is raw here)
-    assert recs[0].n_collectives <= 3
+    # 2 fused factor (pmax + gather) pairs + a pmax + gather pair for the
+    # quantized raw leaf ('b' is raw here)
+    assert recs[0].n_collectives <= 6

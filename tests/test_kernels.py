@@ -11,7 +11,10 @@ except ImportError:  # clean env: seeded-sweep fallback, see the shim
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.log_quant import log_dequantize_pallas, log_quantize_pallas
+from repro.core.codec import pack_nibbles
+from repro.kernels.log_quant import (log_dequantize_pallas,
+                                     log_quantize_pack_pallas,
+                                     log_quantize_pallas)
 
 
 # ---------------------------------------------------------------- log_quant
@@ -33,6 +36,36 @@ def test_log_quant_zero_scale():
     x = jnp.zeros((16, 16))
     got = log_quantize_pallas(x, jnp.float32(0.0), interpret=True)
     assert int(jnp.max(jnp.abs(got.astype(jnp.int32)))) == 0
+
+
+@pytest.mark.parametrize("shape", [(7,), (64, 32), (3, 48, 16), (1001,), (513, 7)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bits", [3, 4])
+def test_fused_quantize_pack_matches_two_stage(shape, dtype, bits):
+    """One-pallas_call fused path == quantize-then-pack reference, byte for
+    byte — including the zero pad byte on odd sizes."""
+    x = (jax.random.normal(jax.random.PRNGKey(7), shape) * 2.0).astype(dtype)
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    got = log_quantize_pack_pallas(x, scale, bits=bits, alpha=10.0,
+                                   interpret=True)
+    want = pack_nibbles(ref.log_quantize_ref(x, scale, bits, 10.0))
+    assert got.shape == ((x.size + 1) // 2,) and got.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fused_quantize_pack_zero_scale():
+    got = log_quantize_pack_pallas(jnp.ones((16, 16)), jnp.float32(0.0),
+                                   interpret=True)
+    # zero scale falls back to scale 1.0, same as the unfused kernel
+    want = pack_nibbles(ref.log_quantize_ref(jnp.ones((16, 16)),
+                                             jnp.float32(0.0), 4, 10.0))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fused_quantize_pack_rejects_wide_bits():
+    with pytest.raises(ValueError, match="bits <= 4"):
+        log_quantize_pack_pallas(jnp.ones(8), jnp.float32(1.0), bits=8,
+                                 interpret=True)
 
 
 @settings(max_examples=25, deadline=None)

@@ -5,7 +5,8 @@
   * skip rounds reuse the cached aggregate and freeze compressor state;
     ``max_stale`` forces a fire; warm-up forces fires;
   * effective accounting: fired round == ``wire_bits_per_step()``, skip
-    round == the 64-bit/leaf decision sideband with ONE collective;
+    round == the decision sideband (64 bits/leaf + a 32-bit group
+    force-vote slot) with ONE collective;
   * the auto-planner's ``p_fire`` cost model and the policy-spec knobs;
   * skip-state leaves stay sharded on a 4x2 mesh AFTER launcher-built
     steps run (subprocess, slow) — the lazy namespaces are param-shaped
@@ -28,8 +29,8 @@ import pytest
 
 from repro.core import (AxisComm, CompositeCompressor, CompressorConfig,
                         LeafPolicy, make_compressor, p_fire, plan_auto)
-from repro.core.lazy import (DECISION_BITS_PER_LEAF, OUT_NS, REF_NS,
-                             STALE_NS, staleness_err)
+from repro.core.lazy import (DECISION_BITS_PER_GROUP, DECISION_BITS_PER_LEAF,
+                             OUT_NS, REF_NS, STALE_NS, staleness_err)
 from repro.core.policy import parse_policy_spec
 
 from conftest import broadcast_state
@@ -118,7 +119,7 @@ def test_max_stale_forces_fire_pattern():
     _, st, hist = _run(comp, grads, steps=7)
     fired_bits = comp.wire_bits_per_step()
     side = comp.decision_bits_per_step()
-    assert side == DECISION_BITS_PER_LEAF * 3
+    assert side == DECISION_BITS_PER_LEAF * 3 + DECISION_BITS_PER_GROUP
     want = [fired_bits, side, side, fired_bits, side, side, fired_bits]
     assert [b for b, _ in hist] == want
     # a skipped round runs exactly ONE collective (the decision psum)
@@ -192,7 +193,7 @@ def test_mixed_eager_and_lazy_leaves_split_groups():
     h = comp.handlers["lq_sgd"]
     eager_bits = sum(h.leaf_wire_bits(comp.plans[i]) for i in (0, 2))
     lazy_bits = h.leaf_wire_bits(comp.plans[1])
-    side = DECISION_BITS_PER_LEAF
+    side = DECISION_BITS_PER_LEAF + DECISION_BITS_PER_GROUP
     assert hist[0][0] == eager_bits + lazy_bits + side
     assert hist[1][0] == eager_bits + side  # scan skipped, others synced
     assert comp.wire_bits_per_step() == eager_bits + lazy_bits + side

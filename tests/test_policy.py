@@ -245,8 +245,9 @@ def test_per_leaf_bits_subgroup_one_phase_per_wire_dtype():
                   LeafPolicy(method="lq_sgd", bits=8),   # raw-route 'b'
                   LeafPolicy(method="lq_sgd", rank=2, bits=16)])
     _, _, rec = _run(comp, grads)
-    # P phase: {8,16} -> 2 fused collectives; Q phase: 2; raw 'b': 1
-    assert rec.n_collectives == 5, rec.n_collectives
+    # P phase: {8,16} -> 2 fused (pmax + gather) pairs = 4; Q phase: 4;
+    # raw 'b' quantizes too: its own pmax + gather = 2
+    assert rec.n_collectives == 10, rec.n_collectives
     assert rec.bits_sent == comp.wire_bits_per_step()
 
 

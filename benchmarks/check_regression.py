@@ -48,6 +48,7 @@ import time
 
 CC = "BENCH_comm_cost.json"
 ST = "BENCH_step_time.json"
+GL = "BENCH_graph_lint.json"
 
 HISTORY = "BENCH_history.jsonl"
 
@@ -66,6 +67,9 @@ HISTORY_SERIES = [
         "BENCH_quant_kernel.json",
         "rows.quant_kernel/pallas_fused_quantize_pack.us_per_call",
     ),
+    # graph-lint headline: collectives/step + payload bits per matrix
+    # config (static accounting), plus each config's lint wall-clock
+    (GL, "configs."),
 ]
 
 # (file, dotted-path prefix, lower_is_better, relative tolerance, hard)
@@ -75,6 +79,9 @@ RULES = [
     (CC, "policy_sweep.uniform_best_wire_bits", True, 0.01, True),
     (CC, "lazy_sweep.results.eager.", True, 0.01, True),
     (CC, "lazy_sweep.results.lazy_", True, 0.35, False),
+    # collectives/step and payload bits from the graph linter are exact
+    # static accounting: any growth is a real graph change
+    (GL, "configs.", True, 0.01, True),
     ("BENCH_step_time.json", "", True, 0.50, False),
     ("BENCH_convergence.json", "", True, 0.50, False),
     ("BENCH_privacy.json", "", True, 0.50, False),
@@ -93,6 +100,7 @@ SOFT_KEYS = [
     "steps",
     "schema",
     "fire_rate",
+    "lint_s",
 ]
 
 # metrics where a DROP (not growth) is the bad direction, overriding the
@@ -157,6 +165,10 @@ def check_lazy_gate(fresh_dir):
                 "HARD: adaptive-LAQ accuracy left the fixed-threshold "
                 f"band: {adaptive.get('acc')} vs {adaptive.get('fixed_acc')}"
             )
+    gl = _load(os.path.join(fresh_dir, GL))
+    if gl is not None and not gl.get("all_ok"):  # lint gate (PR: graph lint)
+        bad = [c["name"] for c in gl.get("configs", []) if not c.get("ok")]
+        out.append(f"HARD: graph-lint findings in config(s): {', '.join(bad)}")
     return out
 
 

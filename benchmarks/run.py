@@ -21,6 +21,10 @@ Prints ``name,us_per_call,derived`` CSV (scaffold contract):
                      eager vs lazy-gate vs lazy-elide steps/sec on a real
                      8-device host-platform mesh (subprocess; merged into
                      BENCH_step_time.json)
+  * graph_lint    -> static collective/sharding lint of the compiled step
+                     graph over a config matrix (dense/MoE/SSM smokes +
+                     the full 671B abstract trace); any rule finding fails
+                     the section — this is CI's graph-lint gate
 
 Every section module implements the shared JSON contract:
 
@@ -53,9 +57,9 @@ def main() -> None:
                     help="also write each section's BENCH_*.json")
     args = ap.parse_args()
 
-    from benchmarks import (comm_cost, convergence, gia_ssim, lazy_elision,
-                            lazy_sweep, policy_sweep, quant_kernel,
-                            step_time)
+    from benchmarks import (comm_cost, convergence, gia_ssim, graph_lint,
+                            lazy_elision, lazy_sweep, policy_sweep,
+                            quant_kernel, step_time)
 
     # key-merging sections AFTER their owning file's section:
     # policy_sweep/lazy_sweep ride in BENCH_comm_cost.json, lazy_elision
@@ -67,6 +71,7 @@ def main() -> None:
         "quant_kernel": quant_kernel,
         "step_time": step_time,
         "lazy_elision": lazy_elision,
+        "graph_lint": graph_lint,
         "convergence": convergence,
         "gia_ssim": gia_ssim,
     }

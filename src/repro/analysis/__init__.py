@@ -1,0 +1,54 @@
+"""Static analysis of lowered/compiled step graphs.
+
+The subsystem traces any (config x policy x mesh x runtime) combination to
+jaxpr and compiled HLO — abstract shapes only, nothing executes — then:
+
+* extracts a structured **collective inventory**
+  (:mod:`repro.analysis.inventory`): op kind, operand bits, wire dtype,
+  replica groups, enclosing-conditional branch, and the source tag the
+  compressors attach via ``jax.named_scope`` so every row maps back to a
+  policy method group;
+* runs a pluggable **rule engine** (:mod:`repro.analysis.rules`) over it:
+  elision containment, accounting parity, predicate uniformity, donation
+  aliasing, shadow-collective ban, wire-dtype hygiene.
+
+Entry points: ``python -m repro.analysis.lint`` (CLI, see README) and
+:func:`repro.analysis.lint.lint_step` (library, used by
+``launch/dryrun.py``). ``tests/test_elision.py`` consumes the inventory
+directly instead of hand-rolled jaxpr/HLO parsers.
+
+Re-exports resolve lazily (PEP 562): ``python -m repro.analysis.lint``
+imports this package *before* the CLI can pin
+``--xla_force_host_platform_device_count``, so nothing here may import
+jax (the rule engine pulls it in via :mod:`repro.core`).
+"""
+
+_EXPORTS = {
+    "HloModule": "repro.analysis.hlo",
+    "parse_module": "repro.analysis.hlo",
+    "CollectiveRow": "repro.analysis.inventory",
+    "CondSite": "repro.analysis.inventory",
+    "hlo_inventory": "repro.analysis.inventory",
+    "jaxpr_inventory": "repro.analysis.inventory",
+    "Finding": "repro.analysis.rules",
+    "LintReport": "repro.analysis.rules",
+    "RuleResult": "repro.analysis.rules",
+    "run_rules": "repro.analysis.rules",
+    "lint_step": "repro.analysis.lint",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    try:
+        module = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}") from None
+    import importlib
+
+    return getattr(importlib.import_module(module), name)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

@@ -1,0 +1,232 @@
+"""Collective inventory: one structured row per communication op.
+
+Two extractors produce the same row type at two levels of the stack:
+
+* :func:`jaxpr_inventory` walks a traced jaxpr (recursing into ``cond``
+  branches, ``pjit``/``scan``/``shard_map`` bodies) and records every
+  collective primitive with its operand payload, source tag, and
+  enclosing-conditional branch;
+* :func:`hlo_inventory` does the same over a parsed compiled module
+  (:func:`repro.analysis.hlo.parse_module`), where branch membership is
+  computed from the conditional instructions' call graphs and the source
+  tag is XLA's ``op_name`` metadata (which preserves ``jax.named_scope``
+  frames through compilation).
+
+Source tags: the compressors wrap their phases in ``jax.named_scope`` —
+``comp.<method>.eager``, ``comp.<method>.lazy``, ``lazy.decision``,
+``comp.warmup_shadow``, ``train.metrics``. One jaxpr subtlety the walker
+compensates for: ``lax.cond`` branch jaxprs RESET the name stack, so the
+walker threads the enclosing equation's stack down as a prefix when it
+recurses — without that, every row inside a fire branch would lose its
+group tag.
+
+Chained gathers: a multi-axis ``AxisComm.all_gather`` lowers to one
+``all_gather`` per mesh axis, each consuming the previous hop's output.
+Only the first hop is the worker's own payload (the rest re-ship already
+gathered bytes), so rows after the first in a chain are flagged
+``chained`` and excluded from accounting parity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterator
+
+from repro.analysis.hlo import HloModule, parse_type
+
+__all__ = [
+    "CollectiveRow",
+    "CondSite",
+    "HLO_COLLECTIVES",
+    "JAXPR_COLLECTIVES",
+    "hlo_inventory",
+    "jaxpr_inventory",
+]
+
+# jax collective primitive names (pmean lowers to psum + divide, so it
+# appears as psum; reduce_scatter is psum_scatter at the primitive level)
+JAXPR_COLLECTIVES = {
+    "psum",
+    "pmax",
+    "pmin",
+    "all_gather",
+    "all_to_all",
+    "psum_scatter",
+    "reduce_scatter",
+    "ppermute",
+    "pbroadcast",
+}
+
+HLO_COLLECTIVES = {
+    "all-reduce",
+    "all-gather",
+    "all-to-all",
+    "reduce-scatter",
+    "collective-permute",
+    "collective-broadcast",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveRow:
+    """One collective op, at either the jaxpr or the HLO level."""
+
+    kind: str  # primitive name ("psum") or HLO opcode ("all-reduce")
+    dtype: str  # operand element type ("float32" / "s8")
+    shape: tuple[int, ...]  # first operand's (local) shape
+    bits: int  # total operand payload bits, all array operands
+    tag: str  # "/"-joined source scopes; "" when untagged
+    cond: tuple[int, int] | None  # (conditional ordinal, branch index)
+    level: str  # "jaxpr" | "hlo"
+    chained: bool = False  # later hop of a multi-axis all_gather chain
+    computation: str = ""  # hlo: enclosing computation name
+    name: str = ""  # hlo: instruction name
+    replica_groups: str | None = None
+
+    def tagged(self, scope: str) -> bool:
+        return scope in self.tag
+
+
+@dataclasses.dataclass
+class CondSite:
+    """One conditional, with the collective rows under each branch
+    (transitively — nested calls included)."""
+
+    index: int
+    tag: str
+    level: str
+    branches: list[list[CollectiveRow]]
+    name: str = ""
+
+    def branch_kinds(self, i: int) -> list[str]:
+        return [r.kind for r in self.branches[i]]
+
+
+def _join(prefix: str, stack: str) -> str:
+    return "/".join(p for p in (prefix, stack) if p)
+
+
+def _sub_jaxprs(params: dict) -> Iterator[Any]:
+    """Inner jaxprs of a non-cond equation (pjit/scan/shard_map/...)."""
+    for v in params.values():
+        vals = v if isinstance(v, (list, tuple)) else [v]
+        for s in vals:
+            inner = getattr(s, "jaxpr", s)
+            if hasattr(inner, "eqns"):
+                yield inner
+
+
+def _aval_bits(aval: Any) -> int:
+    dtype = getattr(aval, "dtype", None)
+    if dtype is None:
+        return 0
+    numel = 1
+    for d in tuple(getattr(aval, "shape", ()) or ()):
+        numel *= int(d)
+    return numel * dtype.itemsize * 8
+
+
+def jaxpr_inventory(jaxpr: Any) -> tuple[list[CollectiveRow], list[CondSite]]:
+    """Walk a (closed) jaxpr into collective rows + conditional sites."""
+    rows: list[CollectiveRow] = []
+    conds: list[CondSite] = []
+
+    def walk(
+        jx: Any,
+        prefix: str,
+        cond_ctx: tuple[int, int] | None,
+        gather_outs: set,
+    ) -> None:
+        for eqn in jx.eqns:
+            name = eqn.primitive.name
+            stack = str(getattr(eqn.source_info, "name_stack", "") or "")
+            tag = _join(prefix, stack)
+            if name == "cond" and "branches" in eqn.params:
+                site = CondSite(index=len(conds), tag=tag, level="jaxpr", branches=[])
+                conds.append(site)
+                for b_idx, branch in enumerate(eqn.params["branches"]):
+                    start = len(rows)
+                    walk(
+                        getattr(branch, "jaxpr", branch),
+                        tag,
+                        (site.index, b_idx),
+                        set(),
+                    )
+                    site.branches.append(rows[start:])
+                continue
+            if name in JAXPR_COLLECTIVES:
+                avals = [
+                    v.aval for v in eqn.invars if getattr(v, "aval", None) is not None
+                ]
+                first = avals[0] if avals else None
+                chained = name == "all_gather" and any(
+                    v in gather_outs for v in eqn.invars
+                )
+                if name == "all_gather":
+                    gather_outs.update(eqn.outvars)
+                rows.append(
+                    CollectiveRow(
+                        kind=name,
+                        dtype=str(first.dtype) if first is not None else "",
+                        shape=tuple(first.shape) if first is not None else (),
+                        bits=sum(_aval_bits(a) for a in avals),
+                        tag=tag,
+                        cond=cond_ctx,
+                        level="jaxpr",
+                        chained=chained,
+                    )
+                )
+                continue
+            for sub in _sub_jaxprs(eqn.params):
+                walk(sub, tag, cond_ctx, set())
+
+    walk(getattr(jaxpr, "jaxpr", jaxpr), "", None, set())
+    return rows, conds
+
+
+def hlo_inventory(module: HloModule) -> tuple[list[CollectiveRow], list[CondSite]]:
+    """Collective rows + conditional sites of a parsed compiled module."""
+    conds: list[CondSite] = []
+    branch_of: dict[str, tuple[int, int]] = {}
+    n_branches: list[int] = []
+    for ci, ins in enumerate(module.conditionals()):
+        conds.append(
+            CondSite(
+                index=ci,
+                tag=ins.op_name or "",
+                level="hlo",
+                branches=[],
+                name=ins.name,
+            )
+        )
+        n_branches.append(len(ins.branch_targets))
+        for bi, target in enumerate(ins.branch_targets):
+            for comp in module.reachable(target):
+                branch_of.setdefault(comp, (ci, bi))
+    rows: list[CollectiveRow] = []
+    for ins in module.instructions():
+        base = ins.opcode[:-6] if ins.opcode.endswith("-start") else ins.opcode
+        if base not in HLO_COLLECTIVES or ins.opcode.endswith("-done"):
+            continue
+        dtype, shape = "", ()
+        if ins.operand_types:
+            dtype, shape, _ = parse_type(ins.operand_types[0])
+        rows.append(
+            CollectiveRow(
+                kind=base,
+                dtype=dtype,
+                shape=tuple(shape),
+                bits=ins.operand_bits,
+                tag=ins.op_name or "",
+                cond=branch_of.get(ins.computation),
+                level="hlo",
+                computation=ins.computation,
+                name=ins.name,
+                replica_groups=ins.replica_groups,
+            )
+        )
+    for site, nb in zip(conds, n_branches):
+        site.branches = [
+            [r for r in rows if r.cond == (site.index, bi)] for bi in range(nb)
+        ]
+    return rows, conds

@@ -1,0 +1,316 @@
+"""The graph-lint entry points.
+
+CLI::
+
+    PYTHONPATH=src python -m repro.analysis.lint --arch gemma3-1b --smoke \\
+        --compressor lq_sgd --lazy-thresh 0.05 --mesh 2x1 [--json]
+
+Library::
+
+    from repro.analysis.lint import lint_step
+    report = lint_step(cfg, comp_cfg, mesh=mesh)   # LintReport
+    assert report.ok, report.to_json()
+
+Levels: ``jaxpr`` traces the step on a minimal (1, 1) mesh — collective
+*structure* is mesh-shape independent at that level, so even the 671B
+config lints in seconds; ``hlo`` compiles the sharded step on the real
+(forced host-device) mesh, where donation aliasing, replica groups, and
+the compiled conditionals exist. The spec-level predicate-uniformity
+check rides along whenever the compressor has lazy groups.
+
+Ordering constraint: this module must import NOTHING that pulls in jax at
+module scope — ``main`` pins ``--xla_force_host_platform_device_count``
+(from ``--mesh``, or the ``REPRO_DRYRUN_DEVICES`` override the dry-run
+tooling uses) *before* the first jax import, exactly like
+``launch/dryrun.py``.
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+LEVELS = ("jaxpr", "hlo")
+
+_STATUS_GLYPH = {"pass": "PASS", "fail": "FAIL", "skipped": "skip"}
+
+
+def _parse_mesh(spec):
+    """'4x2' -> ((4, 2), ('data', 'model')); 3 dims add a 'pod' axis."""
+    try:
+        dims = tuple(int(p) for p in spec.lower().split("x"))
+    except ValueError:
+        raise ValueError(f"bad --mesh {spec!r}: want e.g. 2x1 or 2x4x2")
+    if not dims or any(d < 1 for d in dims):
+        raise ValueError(f"bad --mesh {spec!r}: dims must be >= 1")
+    if len(dims) == 1:
+        dims = dims + (1,)
+    if len(dims) == 2:
+        return dims, ("data", "model")
+    if len(dims) == 3:
+        return dims, ("pod", "data", "model")
+    raise ValueError(f"bad --mesh {spec!r}: at most 3 dims")
+
+
+def _derived_state_specs(cfg, compressor):
+    """The lazy-state PartitionSpecs the launcher would derive, against
+    replicated params — what the spec-level uniformity rule inspects."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.analysis.trace import abstract_comp_state
+    from repro.train.step import abstract_grads_of
+
+    abstract, _ = abstract_grads_of(cfg)
+    pspecs = jax.tree.map(lambda x: P(*([None] * x.ndim)), abstract)
+    return compressor.state_pspecs(
+        abstract_comp_state(compressor), pspecs, ("data",)
+    )
+
+
+def lint_step(
+    cfg,
+    comp_cfg,
+    *,
+    mesh=None,
+    levels=LEVELS,
+    shape_name="train_4k",
+    hlo_text=None,
+    expect_donation=True,
+    target=None,
+):
+    """Lint one (model config x compressor config) train step.
+
+    ``levels`` selects the artifacts: ``"jaxpr"`` traces on a minimal
+    mesh; ``"hlo"`` compiles on ``mesh`` (required then, unless a
+    pre-compiled module's text is passed via ``hlo_text`` — the dry-run
+    path, which has already compiled). Returns a
+    :class:`repro.analysis.rules.LintReport`.
+    """
+    from repro.analysis.hlo import parse_module
+    from repro.analysis.inventory import hlo_inventory, jaxpr_inventory
+    from repro.analysis.rules import LintContext, run_rules
+    from repro.analysis.trace import compile_step_hlo, trace_step_jaxpr
+    from repro.launch.mesh import make_mesh
+
+    levels = tuple(levels)
+    unknown = set(levels) - set(LEVELS)
+    if unknown:
+        raise ValueError(f"unknown lint level(s) {sorted(unknown)}")
+    target = dict(target or {})
+    target.setdefault("shape", shape_name)
+    target.setdefault("levels", list(levels))
+    compressor = None
+    jrows = jconds = None
+    hmod = hrows = hconds = None
+
+    if "jaxpr" in levels:
+        t0 = time.time()
+        mini = make_mesh((1, 1), ("data", "model"))
+        jaxpr, compressor = trace_step_jaxpr(cfg, comp_cfg, mini, shape_name)
+        jrows, jconds = jaxpr_inventory(jaxpr)
+        target["trace_s"] = round(time.time() - t0, 2)
+
+    if "hlo" in levels:
+        t0 = time.time()
+        if hlo_text is None:
+            if mesh is None:
+                raise ValueError("hlo level needs a mesh (or hlo_text)")
+            hlo_text, compressor = compile_step_hlo(
+                cfg, comp_cfg, mesh, shape_name, donate=expect_donation
+            )
+        hmod = parse_module(hlo_text)
+        hrows, hconds = hlo_inventory(hmod)
+        target["compile_s"] = round(time.time() - t0, 2)
+
+    if compressor is None:
+        from repro.train.step import make_model_compressor
+
+        compressor = make_model_compressor(cfg, comp_cfg)
+
+    ctx = LintContext(
+        compressor=compressor,
+        jaxpr_rows=jrows,
+        jaxpr_conds=jconds,
+        hlo_module=hmod,
+        hlo_rows=hrows,
+        hlo_conds=hconds,
+        state_specs=_derived_state_specs(cfg, compressor),
+        expect_donation=expect_donation,
+    )
+    return run_rules(ctx, target)
+
+
+def format_report(report):
+    """Human-readable report (the non-``--json`` CLI output)."""
+    t = report.target
+    lines = [
+        "== graph lint: {} x {}  ({})".format(
+            t.get("arch", "?"),
+            t.get("shape", "?"),
+            ", ".join(
+                f"{k}={t[k]}"
+                for k in ("compressor", "policy", "mesh")
+                if t.get(k) is not None
+            )
+            or "-",
+        )
+    ]
+    for r in report.results:
+        note = f"  ({r.note})" if r.note else ""
+        lines.append(
+            f"  {_STATUS_GLYPH[r.status]:4s} {r.rule:<24s} [{r.level}]{note}"
+        )
+        for f in r.findings:
+            lines.append(f"       - {f.location}: {f.message}")
+    s = report.summary
+    if s:
+        lines.append(
+            "  summary: "
+            + "  ".join(f"{k}={v}" for k, v in sorted(s.items()))
+        )
+    lines.append("  RESULT: " + ("ok" if report.ok else "FINDINGS"))
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="Static collective/sharding linter for compiled "
+        "train-step graphs (README 'Static analysis').",
+    )
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="lint the arch's scaled-down smoke config")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="2x1",
+                    help="DATAxMODEL (or PODxDATAxMODEL) forced-host mesh "
+                         "for the hlo level; sets the device count")
+    ap.add_argument("--level", default="all",
+                    choices=["all", "jaxpr", "hlo"],
+                    help="jaxpr = structural lint only (fast, any scale); "
+                         "hlo adds the compiled-module rules")
+    ap.add_argument("--hlo-from", default=None, metavar="PATH",
+                    help="lint this pre-dumped HLO text instead of "
+                         "compiling (pairs with dryrun --dump-hlo)")
+    ap.add_argument("--no-donate", action="store_true",
+                    help="compile without donated state (relaxes the "
+                         "donation-aliasing rule)")
+    # compressor knobs — same vocabulary as launch/dryrun.py
+    ap.add_argument("--compressor", default="lq_sgd",
+                    choices=["none", "sgd", "topk", "qsgd", "powersgd",
+                             "lq_sgd"])
+    ap.add_argument("--policy", default=None)
+    ap.add_argument("--error-budget", type=float, default=0.3)
+    ap.add_argument("--warmup", type=int, default=0)
+    ap.add_argument("--rank", type=int, default=1)
+    ap.add_argument("--bits", type=int, default=8)
+    ap.add_argument("--wire", default="allgather_codes",
+                    choices=["allgather_codes", "psum_sim"])
+    ap.add_argument("--avg-mode", default="paper",
+                    choices=["paper", "dequant_then_mean"])
+    ap.add_argument("--fuse", action="store_true")
+    ap.add_argument("--lazy-thresh", type=float, default=0.0)
+    ap.add_argument("--max-stale", type=int, default=4)
+    ap.add_argument("--lazy-mode", default="elide", choices=["elide", "gate"])
+    ap.add_argument("--lazy-adaptive", type=float, default=0.0)
+    ap.add_argument("--json", action="store_true", dest="as_json")
+    ap.add_argument("--out", default=None, help="also write JSON here")
+    args = ap.parse_args(argv)
+
+    try:
+        dims, axes = _parse_mesh(args.mesh)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    # Pin the forced host device count BEFORE the first jax import (jax
+    # locks it at init). REPRO_DRYRUN_DEVICES, the dry-run tooling's
+    # override, wins so CI can shrink every trace with one env var.
+    n_dev = 1
+    for d in dims:
+        n_dev *= d
+    n_dev = int(os.environ.get("REPRO_DRYRUN_DEVICES") or n_dev)
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n_dev}"
+    )
+
+    from repro.configs import INPUT_SHAPES, get_config, list_archs
+    from repro.core import CompressorConfig
+    from repro.launch.mesh import make_mesh
+
+    if args.arch not in list_archs():
+        print(f"error: unknown --arch {args.arch!r}; options: "
+              f"{', '.join(list_archs())}", file=sys.stderr)
+        return 2
+    if args.shape not in INPUT_SHAPES:
+        print(f"error: unknown --shape {args.shape!r}; options: "
+              f"{', '.join(sorted(INPUT_SHAPES))}", file=sys.stderr)
+        return 2
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    comp_cfg = CompressorConfig(
+        name=args.compressor,
+        rank=args.rank,
+        bits=args.bits,
+        wire=args.wire,
+        avg_mode=args.avg_mode,
+        fuse_collectives=args.fuse,
+        policy=args.policy,
+        error_budget=args.error_budget,
+        warmup_steps=args.warmup,
+        lazy_thresh=args.lazy_thresh,
+        max_stale=args.max_stale,
+        lazy_mode=args.lazy_mode,
+        lazy_adaptive=args.lazy_adaptive,
+    )
+    levels = LEVELS if args.level == "all" else (args.level,)
+    hlo_text = None
+    if args.hlo_from:
+        with open(args.hlo_from) as f:
+            hlo_text = f.read()
+        if "hlo" not in levels:
+            levels = levels + ("hlo",)
+    mesh = None
+    if "hlo" in levels and hlo_text is None:
+        try:
+            mesh = make_mesh(dims, axes)
+        except ValueError as e:
+            print(f"error: cannot build mesh {args.mesh!r} with {n_dev} "
+                  f"forced devices: {e}", file=sys.stderr)
+            return 2
+
+    target = {
+        "arch": args.arch + ("[smoke]" if args.smoke else ""),
+        "compressor": args.compressor,
+        "policy": args.policy,
+        "mesh": args.mesh if "hlo" in levels else None,
+    }
+    try:
+        report = lint_step(
+            cfg,
+            comp_cfg,
+            mesh=mesh,
+            levels=levels,
+            shape_name=args.shape,
+            hlo_text=hlo_text,
+            expect_donation=not args.no_donate,
+            target=target,
+        )
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report.to_json(), f, indent=1)
+    if args.as_json:
+        print(json.dumps(report.to_json(), indent=1))
+    else:
+        print(format_report(report))
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

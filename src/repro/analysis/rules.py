@@ -1,0 +1,518 @@
+"""The graph-lint rule engine.
+
+Each rule is a function ``(LintContext) -> RuleResult`` registered in
+:data:`RULES`; :func:`run_rules` runs every rule over the collective
+inventory and folds the results into a :class:`LintReport` (JSON-able —
+the CLI's ``--json`` emits it verbatim). A rule that lacks its required
+artifact (e.g. no compiled HLO was provided) reports ``skipped``, never
+``pass``.
+
+The rule catalog (ids are stable — tests and CI grep for them):
+
+``elision-containment``
+    Every payload collective of a lazy group sits inside its ``lax.cond``
+    fire branch; the skip branch launches none; exactly one unconditional
+    decision psum per group. Checked structurally at the jaxpr level and
+    against the compiled conditionals at the HLO level.
+``accounting-parity``
+    The inventory's summed operand bits equal the compressors' static
+    physical accounting per method group (``physical_bits_by_method``),
+    the decision psum is exactly the accounted ``64n + 32`` sideband, and
+    a warm graph's shadow equals ``warmup_extra_bits``. Divergence from
+    the *semantic* wire accounting (``wire_bits_by_method``) is reported
+    as a note — TopK's dense simulation and ``wire='psum_sim'`` are known
+    simulation gaps, not drift.
+``predicate-uniformity``
+    The lazy dispatch predicate is provably worker-uniform: staleness /
+    EMA state specs replicate (``launch/sharding.py:assert_replicated``),
+    and the compiled conditional's predicate backward-slices to an
+    all-reduce or a parameter with no ``partition-id`` / ``replica-id`` /
+    rng taint.
+``donation-aliasing``
+    A step compiled with donated state actually aliases buffers
+    (``input_output_alias`` in the module header) — no silent copies.
+``shadow-collective-ban``
+    Steady-state graphs carry no fp32 warm-up shadow, and no untagged
+    large fp32 collective outside the policy plan exists at any step.
+``wire-dtype-hygiene``
+    Payload gathers carry exactly the codec's container dtype (no
+    implicit upcast between encode and the collective); quantized groups
+    never ship codes through an fp32 psum (``wire='psum_sim'``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from repro.analysis.inventory import CollectiveRow, CondSite
+from repro.core import lazy as lazy_mod
+
+__all__ = [
+    "Finding",
+    "LintContext",
+    "LintReport",
+    "RULES",
+    "RuleResult",
+    "run_rules",
+]
+
+# ignore collectives smaller than this in the shadow ban: scalar telemetry
+# and counters are not wire the policy plan accounts
+SHADOW_MIN_BITS = 1024
+
+# tags that legitimately carry collectives (method payloads + decision
+# sideband ride "comp."; metrics pmeans are telemetry)
+ALLOWED_TAGS = ("comp.", "train.metrics")
+
+_FORBIDDEN_PRED_OPS = {"partition-id", "replica-id", "rng-bit-generator", "rng"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    location: str
+    message: str
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class RuleResult:
+    rule: str
+    level: str  # artifacts the rule actually checked, e.g. "jaxpr+hlo"
+    status: str  # "pass" | "fail" | "skipped"
+    findings: list[Finding]
+    note: str = ""
+
+    def to_json(self) -> dict:
+        return {
+            "id": self.rule,
+            "level": self.level,
+            "status": self.status,
+            "findings": [f.to_json() for f in self.findings],
+            "note": self.note,
+        }
+
+
+@dataclasses.dataclass
+class LintContext:
+    """Everything a rule may consult. ``None`` artifacts mean the caller
+    did not produce that level — rules needing them report skipped."""
+
+    compressor: Any
+    jaxpr_rows: list[CollectiveRow] | None = None
+    jaxpr_conds: list[CondSite] | None = None
+    hlo_module: Any | None = None
+    hlo_rows: list[CollectiveRow] | None = None
+    hlo_conds: list[CondSite] | None = None
+    state_specs: Any | None = None  # {namespace: ...} PartitionSpecs
+    expect_donation: bool = True
+
+    @property
+    def cfg(self) -> Any:
+        return self.compressor.cfg
+
+
+@dataclasses.dataclass
+class LintReport:
+    target: dict
+    results: list[RuleResult]
+    summary: dict
+
+    @property
+    def ok(self) -> bool:
+        return all(r.status != "fail" for r in self.results)
+
+    def to_json(self) -> dict:
+        return {
+            "target": self.target,
+            "ok": self.ok,
+            "summary": self.summary,
+            "rules": [r.to_json() for r in self.results],
+        }
+
+
+# ---------------------------------------------------------------- helpers
+
+
+def _lazy_groups(comp: Any) -> dict[str, list[int]]:
+    return dict(getattr(comp, "lazy_groups", {}) or {})
+
+
+def _handlers(comp: Any) -> dict[str, Any]:
+    if hasattr(comp, "handlers"):
+        return dict(comp.handlers)
+    return {comp.method: comp.handler}
+
+
+def _plans_by_method(comp: Any) -> dict[str, list]:
+    out: dict[str, list] = {}
+    for pl in comp.plans:
+        out.setdefault(pl.policy.method, []).append(pl)
+    return out
+
+
+def _warmup_steps(comp: Any) -> int:
+    sched = getattr(comp, "schedule", None)
+    return int(getattr(sched, "warmup_steps", 0) or 0)
+
+
+def _payload_rows(rows: list[CollectiveRow], m: str) -> list[CollectiveRow]:
+    """Method ``m``'s accountable rows: tagged, first-hop, and not in a
+    skip branch (branch 0). Fire-branch and unconditional rows count."""
+    return [
+        r
+        for r in rows
+        if r.tagged(f"comp.{m}.")
+        and not r.chained
+        and not (r.cond is not None and r.cond[1] == 0)
+    ]
+
+
+def _containers(method: str, pl: Any) -> set[str]:
+    """Wire container dtypes the method's codec emits for this leaf's
+    gathers (int8 holds b <= 8 incl. nibble-packed; int16 above)."""
+    if method in ("topk", "powersgd"):
+        return {"float32"}
+    if method in ("qsgd", "lq_sgd"):
+        bits = {pl.policy.bits}
+        if method == "lq_sgd":
+            bits.add(pl.policy.eff_bits_q)
+        return {"int8" if b <= 8 else "int16" for b in bits}
+    return set()
+
+
+# ------------------------------------------------------------------ rules
+
+
+def rule_elision_containment(ctx: LintContext) -> RuleResult:
+    rid = "elision-containment"
+    lazy = _lazy_groups(ctx.compressor)
+    if not lazy:
+        return RuleResult(rid, "jaxpr", "pass", [],
+                          note="no lazy groups — nothing to contain")
+    findings: list[Finding] = []
+    levels: list[str] = []
+    if ctx.jaxpr_rows is not None:
+        levels.append("jaxpr")
+        for m in lazy:
+            tag = f"comp.{m}.lazy"
+            loc = f"lazy group {m!r}"
+            sites = [c for c in (ctx.jaxpr_conds or []) if tag in c.tag]
+            if len(sites) != 1:
+                findings.append(Finding(
+                    rid, loc,
+                    f"expected exactly 1 lax.cond dispatch, found "
+                    f"{len(sites)} — payload collectives are not elided "
+                    f"(lazy_mode={ctx.cfg.lazy_mode!r})"))
+            uncond = [r for r in ctx.jaxpr_rows
+                      if r.tagged(tag) and r.cond is None]
+            decision = [r for r in uncond if r.tagged("lazy.decision")]
+            if len(decision) != 1 or decision[0].kind != "psum":
+                findings.append(Finding(
+                    rid, loc,
+                    f"expected exactly one unconditional decision psum, "
+                    f"found {[r.kind for r in decision]}"))
+            for r in uncond:
+                if not r.tagged("lazy.decision"):
+                    findings.append(Finding(
+                        rid, loc,
+                        f"payload {r.kind} ({r.dtype}{list(r.shape)}) "
+                        f"executes unconditionally — outside the cond "
+                        f"fire branch"))
+            for c in sites:
+                if len(c.branches) != 2:
+                    findings.append(Finding(
+                        rid, loc,
+                        f"cond has {len(c.branches)} branches, expected 2"))
+                    continue
+                for r in c.branches[0]:
+                    findings.append(Finding(
+                        rid, loc,
+                        f"skip branch launches a {r.kind} — a skipped "
+                        f"round would still communicate"))
+                payload = [r for r in c.branches[1]
+                           if not r.tagged("lazy.decision")]
+                if not payload:
+                    findings.append(Finding(
+                        rid, loc, "fire branch has no payload collectives"))
+    if ctx.hlo_rows is not None:
+        levels.append("hlo")
+        for c in ctx.hlo_conds or []:
+            counts = sorted(len(b) for b in c.branches)
+            if counts and counts[0] != 0 and counts[-1] > 0:
+                findings.append(Finding(
+                    rid, f"hlo conditional {c.name}",
+                    f"both branches launch collectives "
+                    f"({[len(b) for b in c.branches]}) — nothing elided"))
+        for m in lazy:
+            tag = f"comp.{m}.lazy"
+            hit = [
+                c for c in (ctx.hlo_conds or [])
+                if tag in c.tag
+                or any(r.tagged(tag) for b in c.branches for r in b)
+            ]
+            if not hit:
+                findings.append(Finding(
+                    rid, f"lazy group {m!r}",
+                    "no compiled conditional carries this group's payload "
+                    "— XLA flattened the dispatch"))
+        decision = [r for r in ctx.hlo_rows if r.tagged("lazy.decision")]
+        if not decision:
+            findings.append(Finding(
+                rid, "hlo", "no compiled decision all-reduce found"))
+        for r in decision:
+            if r.cond is not None:
+                findings.append(Finding(
+                    rid, f"hlo {r.name}",
+                    "decision all-reduce ended up INSIDE a conditional — "
+                    "the predicate would depend on itself"))
+    if not levels:
+        return RuleResult(rid, "-", "skipped", [],
+                          note="no jaxpr or HLO artifact provided")
+    status = "fail" if findings else "pass"
+    return RuleResult(rid, "+".join(levels), status, findings)
+
+
+def rule_accounting_parity(ctx: LintContext) -> RuleResult:
+    rid = "accounting-parity"
+    if ctx.jaxpr_rows is None:
+        return RuleResult(rid, "-", "skipped", [],
+                          note="needs the jaxpr inventory")
+    comp = ctx.compressor
+    findings: list[Finding] = []
+    expected = comp.physical_bits_by_method()
+    semantic = (comp.wire_bits_by_method()
+                if hasattr(comp, "wire_bits_by_method")
+                else {next(iter(expected)): comp.wire_bits_per_step()})
+    notes: list[str] = []
+    for m, exp in sorted(expected.items()):
+        got = sum(r.bits for r in _payload_rows(ctx.jaxpr_rows, m))
+        if got != exp:
+            findings.append(Finding(
+                rid, f"method group {m!r}",
+                f"inventory sums {got} bits/step but static physical "
+                f"accounting expects {exp} (drift "
+                f"{got - exp:+d} bits)"))
+        sem = semantic.get(m, exp)
+        if sem != exp:
+            notes.append(f"{m}: physical {exp} vs semantic wire {sem} "
+                         f"(known simulation gap)")
+    for m, lz in _lazy_groups(comp).items():
+        want = (lazy_mod.DECISION_BITS_PER_LEAF * len(lz)
+                + lazy_mod.DECISION_BITS_PER_GROUP)
+        got = sum(r.bits for r in ctx.jaxpr_rows
+                  if r.tagged(f"comp.{m}.lazy") and r.tagged("lazy.decision"))
+        if got != want:
+            findings.append(Finding(
+                rid, f"lazy group {m!r}",
+                f"decision psum carries {got} bits, accounting says "
+                f"{want} (64/leaf + 32/group)"))
+    warm = _warmup_steps(comp)
+    shadow = sum(r.bits for r in ctx.jaxpr_rows
+                 if r.tagged("comp.warmup_shadow"))
+    if warm > 0:
+        want = comp.warmup_extra_bits()
+        if shadow != want:
+            findings.append(Finding(
+                rid, "warmup shadow",
+                f"shadow all-reduce sums {shadow} bits, "
+                f"warmup_extra_bits() says {want}"))
+    status = "fail" if findings else "pass"
+    return RuleResult(rid, "jaxpr", status, findings, note="; ".join(notes))
+
+
+def _slice_predicate(ctx: LintContext, cond: Any) -> list[Finding]:
+    """Backward-slice a compiled conditional's predicate operand."""
+    rid = "predicate-uniformity"
+    module = ctx.hlo_module
+    comp = module.computations.get(cond.computation)
+    if comp is None:
+        return []
+    defs = {i.name: i for i in comp.instructions}
+    findings: list[Finding] = []
+    saw_reduce = saw_param = False
+    stack = list(cond.operand_names[:1])
+    seen: set[str] = set()
+    while stack:
+        n = stack.pop()
+        if n in seen:
+            continue
+        seen.add(n)
+        ins = defs.get(n)
+        if ins is None:
+            continue
+        if ins.opcode in _FORBIDDEN_PRED_OPS:
+            findings.append(Finding(
+                rid, f"hlo {cond.name} <- {ins.name}",
+                f"predicate depends on {ins.opcode} — per-device value, "
+                f"branch choice can diverge across workers"))
+            continue
+        if ins.opcode.startswith("all-reduce"):
+            saw_reduce = True
+            continue
+        if ins.opcode == "parameter":
+            saw_param = True
+            continue
+        for callee in ins.callees:
+            for sub in module.reachable(callee):
+                for i2 in module.computations[sub].instructions:
+                    if i2.opcode in _FORBIDDEN_PRED_OPS:
+                        findings.append(Finding(
+                            rid, f"hlo {cond.name} <- {ins.name}/{i2.name}",
+                            f"predicate depends on {i2.opcode} inside "
+                            f"{sub} — per-device value"))
+                    if i2.opcode.startswith("all-reduce"):
+                        saw_reduce = True
+        stack.extend(ins.operand_names)
+    if not (saw_reduce or saw_param):
+        findings.append(Finding(
+            rid, f"hlo {cond.name}",
+            "predicate slice reaches neither an all-reduce nor a "
+            "parameter — purely local provenance, uniformity unproven"))
+    return findings
+
+
+def rule_predicate_uniformity(ctx: LintContext) -> RuleResult:
+    rid = "predicate-uniformity"
+    lazy = _lazy_groups(ctx.compressor)
+    if not lazy:
+        return RuleResult(rid, "spec", "pass", [],
+                          note="no lazy groups — no dispatch predicate")
+    findings: list[Finding] = []
+    levels: list[str] = []
+    if ctx.state_specs is not None:
+        levels.append("spec")
+        from repro.launch.sharding import assert_replicated
+        for ns in (lazy_mod.STALE_NS, lazy_mod.EMA_NS):
+            if ns not in ctx.state_specs:
+                continue
+            try:
+                assert_replicated(ctx.state_specs[ns], f"comp.{ns}")
+            except AssertionError as e:
+                findings.append(Finding(rid, f"state namespace {ns!r}",
+                                        str(e)))
+    if ctx.hlo_module is not None:
+        levels.append("hlo")
+        for cond in ctx.hlo_module.conditionals():
+            findings.extend(_slice_predicate(ctx, cond))
+    if not levels:
+        return RuleResult(rid, "-", "skipped", [],
+                          note="needs state specs or compiled HLO")
+    status = "fail" if findings else "pass"
+    return RuleResult(rid, "+".join(levels), status, findings)
+
+
+def rule_donation_aliasing(ctx: LintContext) -> RuleResult:
+    rid = "donation-aliasing"
+    if ctx.hlo_module is None:
+        return RuleResult(rid, "-", "skipped", [],
+                          note="needs the compiled module header")
+    if not ctx.expect_donation:
+        return RuleResult(rid, "hlo", "pass", [],
+                          note="caller did not donate — nothing to alias")
+    if not ctx.hlo_module.input_output_alias:
+        return RuleResult(rid, "hlo", "fail", [Finding(
+            rid, "module header",
+            "step was compiled with donated state but input_output_alias "
+            "is empty — every donated buffer is silently copied")])
+    n = len(ctx.hlo_module.input_output_alias)
+    return RuleResult(rid, "hlo", "pass", [],
+                      note=f"{n} aliased output(s)")
+
+
+def rule_shadow_collective_ban(ctx: LintContext) -> RuleResult:
+    rid = "shadow-collective-ban"
+    if ctx.jaxpr_rows is None:
+        return RuleResult(rid, "-", "skipped", [],
+                          note="needs the jaxpr inventory")
+    findings: list[Finding] = []
+    warm = _warmup_steps(ctx.compressor)
+    shadow = [r for r in ctx.jaxpr_rows if r.tagged("comp.warmup_shadow")]
+    if warm == 0 and shadow:
+        findings.append(Finding(
+            rid, "warmup shadow",
+            f"steady-state graph still carries {len(shadow)} fp32 shadow "
+            f"collective(s) — at_step() failed to drop the warm-up"))
+    untagged = [
+        r for r in ctx.jaxpr_rows
+        if r.kind in ("psum", "pmean", "all_gather")
+        and r.dtype == "float32"
+        and r.bits >= SHADOW_MIN_BITS
+        and not any(a in r.tag for a in ALLOWED_TAGS)
+    ]
+    for r in untagged:
+        findings.append(Finding(
+            rid, r.tag or "<untagged>",
+            f"fp32 {r.kind} of {r.bits} bits is not in the policy plan "
+            f"(no comp.* source tag)"))
+    status = "fail" if findings else "pass"
+    note = f"warm graph: shadow present as scheduled (W={warm})" if warm else ""
+    return RuleResult(rid, "jaxpr", status, findings, note=note)
+
+
+def rule_wire_dtype_hygiene(ctx: LintContext) -> RuleResult:
+    rid = "wire-dtype-hygiene"
+    if ctx.jaxpr_rows is None:
+        return RuleResult(rid, "-", "skipped", [],
+                          note="needs the jaxpr inventory")
+    findings: list[Finding] = []
+    plans_by_m = _plans_by_method(ctx.compressor)
+    for m, plans in sorted(plans_by_m.items()):
+        allowed: set[str] = set()
+        for pl in plans:
+            allowed |= _containers(m, pl)
+        gathers = [r for r in _payload_rows(ctx.jaxpr_rows, m)
+                   if r.kind == "all_gather"]
+        for r in gathers:
+            if r.dtype not in allowed:
+                findings.append(Finding(
+                    rid, f"method group {m!r}",
+                    f"gather carries {r.dtype}{list(r.shape)} but the "
+                    f"codec containers are {sorted(allowed)} — implicit "
+                    f"upcast between encode and the collective"))
+        quantized = m in ("qsgd", "lq_sgd") and any(
+            pl.route == "lowrank" or m == "lq_sgd" for pl in plans)
+        if quantized and ctx.cfg.wire == "psum_sim":
+            findings.append(Finding(
+                rid, f"method group {m!r}",
+                "wire='psum_sim' ships b-bit codes through an fp32 psum "
+                "— the traced wire is 32/b wider than the accounted one"))
+    status = "fail" if findings else "pass"
+    return RuleResult(rid, "jaxpr", status, findings)
+
+
+RULES: list[tuple[str, Callable[[LintContext], RuleResult]]] = [
+    ("elision-containment", rule_elision_containment),
+    ("accounting-parity", rule_accounting_parity),
+    ("predicate-uniformity", rule_predicate_uniformity),
+    ("donation-aliasing", rule_donation_aliasing),
+    ("shadow-collective-ban", rule_shadow_collective_ban),
+    ("wire-dtype-hygiene", rule_wire_dtype_hygiene),
+]
+
+
+def _summary(ctx: LintContext) -> dict:
+    out: dict[str, Any] = {}
+    if ctx.jaxpr_rows is not None:
+        rows = [r for r in ctx.jaxpr_rows if not r.chained]
+        fired = [r for r in rows if not (r.cond and r.cond[1] == 0)]
+        out["jaxpr_collectives"] = len(rows)
+        out["jaxpr_collectives_fired_round"] = len(fired)
+        out["jaxpr_payload_bits_fired_round"] = sum(r.bits for r in fired)
+        by_kind: dict[str, int] = {}
+        for r in rows:
+            by_kind[r.kind] = by_kind.get(r.kind, 0) + 1
+        out["jaxpr_by_kind"] = by_kind
+    if ctx.hlo_rows is not None:
+        out["hlo_collectives"] = len(ctx.hlo_rows)
+        out["hlo_conditionals"] = len(ctx.hlo_conds or [])
+    return out
+
+
+def run_rules(ctx: LintContext, target: dict | None = None) -> LintReport:
+    results = [fn(ctx) for _, fn in RULES]
+    return LintReport(target=target or {}, results=results,
+                      summary=_summary(ctx))

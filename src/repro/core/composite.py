@@ -231,31 +231,39 @@ class CompositeCompressor(GradCompressor):
         for m, idxs in self.groups.items():
             lz = set(self.lazy_groups.get(m, ()))
             eager = [i for i in idxs if i not in lz]
+            # named_scope source tags ride the jaxpr name stack and XLA's
+            # op_name metadata into the compiled program, mapping every
+            # collective back to its method group (repro.analysis reads them)
             if eager:
                 items = [(i, leaves[i], self.plans[i]) for i in eager]
-                o, upd = self.handlers[m].sync_group(items, state, comm, rec)
+                with jax.named_scope(f"comp.{m}.eager"):
+                    o, upd = self.handlers[m].sync_group(items, state, comm,
+                                                         rec)
                 outs.update(o)
                 for ns, sub in upd.items():
                     updates.setdefault(ns, {}).update(sub)
             if lz:
-                o, upd = self._sync_lazy_group(
-                    m, self.lazy_groups[m], leaves, state, comm, rec, warm)
+                with jax.named_scope(f"comp.{m}.lazy"):
+                    o, upd = self._sync_lazy_group(
+                        m, self.lazy_groups[m], leaves, state, comm, rec,
+                        warm)
                 outs.update(o)
                 for ns, sub in upd.items():
                     updates.setdefault(ns, {}).update(sub)
         # ---- schedule: in-graph full-precision warm-up -------------------
         if self.schedule.warmup_steps > 0:
-            for i, pl in enumerate(self.plans):
-                if not self._lossy(pl):
-                    continue
-                g = leaves[i]
-                exact = comm.pmean(g.astype(jnp.float32)).astype(g.dtype)
-                outs[i] = jnp.where(warm, exact, outs[i])
-            # hold error feedback at zero while warm: the compressed path's
-            # residual was never applied, so recycling it would inject a
-            # phantom correction at step W
-            for k, v in updates.get("err", {}).items():
-                updates["err"][k] = jnp.where(warm, jnp.zeros_like(v), v)
+            with jax.named_scope("comp.warmup_shadow"):
+                for i, pl in enumerate(self.plans):
+                    if not self._lossy(pl):
+                        continue
+                    g = leaves[i]
+                    exact = comm.pmean(g.astype(jnp.float32)).astype(g.dtype)
+                    outs[i] = jnp.where(warm, exact, outs[i])
+                # hold error feedback at zero while warm: the compressed
+                # path's residual was never applied, so recycling it would
+                # inject a phantom correction at step W
+                for k, v in updates.get("err", {}).items():
+                    updates["err"][k] = jnp.where(warm, jnp.zeros_like(v), v)
         new_state = dict(self._merge_state(state, updates))
         new_state["step"] = state["step"] + 1
         out = [outs[i] for i in range(len(leaves))]
@@ -450,6 +458,23 @@ class CompositeCompressor(GradCompressor):
         for pl in self.plans:
             m = pl.policy.method
             out[m] = out.get(m, 0) + self.handlers[m].leaf_wire_bits(pl)
+        for m, lz in self.lazy_groups.items():
+            out[m] = (out.get(m, 0)
+                      + lazy_mod.DECISION_BITS_PER_LEAF * len(lz)
+                      + lazy_mod.DECISION_BITS_PER_GROUP)
+        return out
+
+    def physical_bits_by_method(self) -> dict[str, int]:
+        """Per-method bits the TRACED graph moves in a round where every
+        group fires (collective operand sizes, not the semantic wire):
+        ``leaf_physical_bits`` per leaf plus each lazy group's decision
+        psum — physically a ``(2n+1)``-scalar fp32 vector, exactly the
+        accounted ``64n + 32`` sideband bits. The graph-lint parity rule
+        checks the collective inventory against THIS split."""
+        out: dict[str, int] = {}
+        for pl in self.plans:
+            m = pl.policy.method
+            out[m] = out.get(m, 0) + self.handlers[m].leaf_physical_bits(pl)
         for m, lz in self.lazy_groups.items():
             out[m] = (out.get(m, 0)
                       + lazy_mod.DECISION_BITS_PER_LEAF * len(lz)

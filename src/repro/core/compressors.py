@@ -302,6 +302,17 @@ class LeafGroupHandler:
     def leaf_wire_bits(self, pl: LeafPlan) -> int:
         return self.raw_wire_bits(pl, _numel(pl.shape))
 
+    def leaf_physical_bits(self, pl: LeafPlan) -> int:
+        """Bits the TRACED graph actually moves for this leaf in a fired
+        round — what a collective-inventory walk of the jaxpr sums to, as
+        opposed to ``leaf_wire_bits``'s semantic accounting. The two
+        differ exactly where a wire is *simulated* at a different width:
+        TopK's dense fp32 stand-in for the sparse payload, and
+        ``cfg.wire='psum_sim'`` shipping codes as fp32. The graph-lint
+        accounting-parity rule checks the graph against THIS figure and
+        reports where it diverges from the semantic one."""
+        return self.leaf_wire_bits(pl)
+
 
 class TopKHandler(LeafGroupHandler):
     """TopK-SGD (Shi et al. 2019 / Aji & Heafield 2017) with error feedback.
@@ -373,6 +384,14 @@ class TopKHandler(LeafGroupHandler):
         return (self._k(numel, pl.policy.topk_ratio)
                 * (32 + self.index_bits(numel)))
 
+    def leaf_physical_bits(self, pl):
+        numel = _numel(pl.shape)
+        if pl.route != "lowrank":
+            return self.raw_wire_bits(pl, numel)
+        # the dense fp32 simulation of the sparse all-reduce ships the
+        # whole masked tensor regardless of wire mode
+        return numel * 32
+
 
 class QSGDHandler(LeafGroupHandler):
     """QSGD (Alistarh et al. 2017): stochastic uniform quantization.
@@ -423,6 +442,16 @@ class QSGDHandler(LeafGroupHandler):
         L = pl.shape[0] if pl.stacked else 1
         return codec.wire_bits(numel) + codec.scale_bits(L)
 
+    def leaf_physical_bits(self, pl):
+        numel = _numel(pl.shape)
+        if pl.route != "lowrank":
+            return self.raw_wire_bits(pl, numel)
+        codec = self._codec(pl.policy.bits)
+        L = pl.shape[0] if pl.stacked else 1
+        if self.cfg.wire == "psum_sim":  # codes ride the psum as fp32
+            return numel * 32 + codec.scale_bits(L)
+        return codec.wire_bits(numel) + codec.scale_bits(L)
+
 
 # --------------------------------------------------------------------------
 # compressors: one handler driven over the whole pytree
@@ -470,7 +499,10 @@ class GradCompressor:
         rec = CommRecord()
         leaves = jax.tree_util.tree_flatten(grads)[0]
         items = list(zip(range(len(leaves)), leaves, self.plans))
-        outs, updates = self.handler.sync_group(items, state, comm, rec)
+        # same source tag the composite puts on its eager groups, so the
+        # graph-lint inventory maps collectives to methods either way
+        with jax.named_scope(f"comp.{self.method}.eager"):
+            outs, updates = self.handler.sync_group(items, state, comm, rec)
         out = [outs[i] for i in range(len(leaves))]
         return (jax.tree_util.tree_unflatten(self.treedef, out),
                 self._merge_state(state, updates), rec)
@@ -528,6 +560,13 @@ class GradCompressor:
     # static accounting for tables -----------------------------------------
     def wire_bits_per_step(self) -> int:
         return sum(self.handler.leaf_wire_bits(pl) for pl in self.plans)
+
+    def physical_bits_by_method(self) -> dict[str, int]:
+        """Traced-graph traffic per method group (one group here; the
+        composite overrides with its per-method split). What the
+        graph-lint accounting-parity rule sums the inventory against."""
+        return {self.method: sum(self.handler.leaf_physical_bits(pl)
+                                 for pl in self.plans)}
 
 
 class NoCompression(GradCompressor):

@@ -234,8 +234,11 @@ def group_decision(xs: Sequence[jax.Array], refs: Sequence[jax.Array],
     forced = stale >= max_stale
     if force is not None:
         forced = forced | force
-    stats = comm.psum(jnp.stack(innov + norms
-                                + [forced.astype(jnp.float32)]))
+    # tagged so the graph-lint inventory can tell the (unconditional)
+    # decision sideband from the group's payload collectives
+    with jax.named_scope("lazy.decision"):
+        stats = comm.psum(jnp.stack(innov + norms
+                                    + [forced.astype(jnp.float32)]))
     rec.add(DECISION_BITS_PER_LEAF * len(xs) + DECISION_BITS_PER_GROUP, 1)
     n = len(xs)
     taus = jnp.asarray([t * t for t in threshs], jnp.float32)

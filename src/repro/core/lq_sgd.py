@@ -81,6 +81,14 @@ class LQSGDHandler(PowerSGDHandler):
         codec = self._codec(pl.policy.bits)
         return codec.wire_bits(numel) + codec.scale_bits(1)
 
+    def leaf_physical_bits(self, pl):
+        if pl.route == "lowrank" or self.cfg.wire != "psum_sim":
+            return super().leaf_physical_bits(pl)
+        # quantized raw leaves under psum_sim: codes ride the psum as fp32
+        from repro.core.compressors import _numel
+        codec = self._codec(pl.policy.bits)
+        return _numel(pl.shape) * 32 + codec.scale_bits(1)
+
 
 class LQSGDCompressor(GradCompressor):
     """The paper's LQ-SGD driven over the whole pytree."""

@@ -171,6 +171,18 @@ class PowerSGDHandler(LeafGroupHandler):
         return (cp.wire_bits(L * n * r) + cp.scale_bits(L)   # P (+ scales)
                 + cq.wire_bits(L * m * r) + cq.scale_bits(L))  # Q (+ scales)
 
+    def leaf_physical_bits(self, pl):
+        if pl.route != "lowrank" or self.cfg.wire != "psum_sim":
+            return self.leaf_wire_bits(pl)
+        # psum_sim ships both factors' codes as fp32 (scale pmaxes as-is)
+        cp = self._codec(self._leaf_bits_p(pl))
+        cq = self._codec(self._leaf_bits_q(pl))
+        n, m = pl.mat_shape
+        r = pl.eff_rank
+        L = pl.shape[0] if pl.stacked else 1
+        return (L * n * r * 32 + cp.scale_bits(L)
+                + L * m * r * 32 + cq.scale_bits(L))
+
 
 class PowerSGDCompressor(GradCompressor):
     """Low-rank gradient compression with error feedback + warm start."""

@@ -65,7 +65,8 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
               backend: str = "xla", verbose: bool = True,
               dump_hlo: str | None = None, unroll: bool = False,
               perf_tag: str | None = None, dp_only: bool = False,
-              moe_impl: str | None = None, moe_hints: bool = False) -> dict:
+              moe_impl: str | None = None, moe_hints: bool = False,
+              lint: bool = False) -> dict:
     """Lower + compile one combination; return the roofline record."""
     cfg = get_config(arch)
     if moe_impl and cfg.n_experts:
@@ -142,6 +143,8 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     t_compile = time.time() - t0
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # newer jax: one dict per executable module
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     if dump_hlo:
         with open(dump_hlo, "w") as f:
@@ -193,6 +196,16 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         "compressor_wire_bits_per_step": wire_bits,
         **rep.as_dict(),
     }
+    if lint and shape.mode == "train":
+        # static verification leg: re-trace the step's jaxpr (minimal mesh,
+        # abstract shapes) and lint it together with the just-compiled HLO
+        # — no second compile, lint_step consumes the module text as-is
+        from repro.analysis.lint import format_report, lint_step
+        report = lint_step(cfg, comp_cfg, shape_name=shape_name, hlo_text=hlo,
+                           target={"arch": arch, "compressor": comp_cfg.name})
+        record["graph_lint"] = report.to_json()
+        if verbose:
+            print(format_report(report))
     if verbose:
         print(f"== {arch} x {shape_name} ({'2-pod' if multi_pod else '1-pod'}, "
               f"{chips} chips) compiled in {t_compile:.0f}s")
@@ -253,6 +266,9 @@ def main() -> None:
     ap.add_argument("--fuse", action="store_true",
                     help="fuse factor collectives: one int8 gather per "
                          "power-iteration phase (perf iteration)")
+    ap.add_argument("--lint", action="store_true",
+                    help="run the graph linter (repro.analysis) over each "
+                         "compiled train step; findings fail the run")
     args = ap.parse_args()
 
     comp_cfg = CompressorConfig(name=args.compressor, rank=args.rank,
@@ -276,7 +292,8 @@ def main() -> None:
                                          perf_tag=args.perf_tag,
                                          dp_only=args.dp_only,
                                          moe_impl=args.moe_impl,
-                                         moe_hints=args.moe_hints))
+                                         moe_hints=args.moe_hints,
+                                         lint=args.lint))
             except Exception as e:  # record failures: they are bugs to fix
                 traceback.print_exc()
                 records.append({"arch": a, "shape": s,
@@ -287,8 +304,11 @@ def main() -> None:
             json.dump(records, f, indent=1)
         print(f"wrote {args.out}")
     n_bad = sum(r["status"] == "error" for r in records)
-    if n_bad:
-        raise SystemExit(f"{n_bad} combination(s) FAILED")
+    n_lint = sum(1 for r in records
+                 if r.get("graph_lint") and not r["graph_lint"]["ok"])
+    if n_bad or n_lint:
+        raise SystemExit(f"{n_bad} combination(s) FAILED, "
+                         f"{n_lint} with graph-lint findings")
 
 
 if __name__ == "__main__":

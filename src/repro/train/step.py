@@ -143,7 +143,10 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, compressor: GradCompressor,
         comm = AxisComm(dp)
         grads, comp_local, rec = compressor.sync(grads, comp_local, comm)
         new_params, new_opt = optimizer.update(grads, state["opt"], params)
-        metrics = {k: jax.lax.pmean(v, dp) for k, v in metrics.items()}
+        # tagged: the graph-lint shadow-collective rule allowlists these
+        # scalar pmeans (they are telemetry, not wire the policy accounts)
+        with jax.named_scope("train.metrics"):
+            metrics = {k: jax.lax.pmean(v, dp) for k, v in metrics.items()}
         # EFFECTIVE accounting: static for eager compressors (a plain int,
         # same number every step), static + gate-weighted for lazily
         # aggregated groups (a traced scalar — skipped rounds report only

@@ -35,21 +35,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.analysis.inventory import jaxpr_inventory
+from repro.analysis.trace import trace_sync_jaxpr
 from repro.core import (AxisComm, CompositeCompressor, CompressorConfig,
                         LeafPolicy)
-from repro.core.comm import shard_map
-from repro.core.lazy import (EMA_NS, OUT_NS, REF_NS, STALE_NS, ema_update,
-                             group_adaptive_cap, tau_scale2)
+from repro.core.lazy import (EMA_NS, ema_update, group_adaptive_cap,
+                             tau_scale2)
 from repro.launch.sharding import assert_replicated
 
 from conftest import broadcast_state
 
 N = 4
-
-COLLECTIVES = {"psum", "pmax", "pmin", "pmean", "all_gather", "all_to_all",
-               "reduce_scatter", "ppermute"}
 
 
 def _grads(key, n=None):
@@ -106,53 +104,13 @@ def _run(comp, grads, steps=1, state=None):
 
 
 # --------------------------------------------------------------------------
-# jaxpr: collectives live only where they should
+# jaxpr: collectives live only where they should (via the graph linter's
+# collective inventory — repro.analysis owns the jaxpr/HLO parsers now)
 # --------------------------------------------------------------------------
 
-def _subjaxprs(eqn):
-    for v in eqn.params.values():
-        for s in (v if isinstance(v, (list, tuple)) else [v]):
-            inner = getattr(s, "jaxpr", s)
-            if hasattr(inner, "eqns"):
-                yield inner
-
-
-def _find_eqns(jaxpr, prim):
-    found = []
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == prim:
-            found.append(eqn)
-        for sub in _subjaxprs(eqn):
-            found += _find_eqns(sub, prim)
-    return found
-
-
-def _collectives_in(jaxpr, *, enter_cond=True):
-    names = []
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name in COLLECTIVES:
-            names.append(eqn.primitive.name)
-        if eqn.primitive.name == "cond" and not enter_cond:
-            continue
-        for sub in _subjaxprs(eqn):
-            names += _collectives_in(sub, enter_cond=enter_cond)
-    return names
-
-
-def _trace_shardmap(comp, grads):
-    """Trace one sync under a 1-device manual shard_map — the primitives
-    (and their placement relative to cond) are identical to the 8-device
-    production trace; only the axis size differs."""
-    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
-    state = comp.init_state(jax.random.PRNGKey(42))
-
-    def worker(g, st):
-        out, st2, _ = comp.sync(g, st, AxisComm(("data",)))
-        return out, st2
-
-    f = shard_map(worker, mesh=mesh, in_specs=(P(), P()),
-                  out_specs=(P(), P()), axis_names={"data"})
-    return jax.make_jaxpr(f)(grads, state)
+def _inventory(comp, grads):
+    """(rows, cond sites) of one sync's jaxpr, via the shared extractor."""
+    return jaxpr_inventory(trace_sync_jaxpr(comp, _abstract(grads)))
 
 
 @pytest.mark.parametrize("fuse", [False, True])
@@ -160,19 +118,18 @@ def _trace_shardmap(comp, grads):
 def test_group_collectives_only_in_fire_branch(method, fuse):
     grads = _grads(jax.random.PRNGKey(0))
     comp = _composite(method, 1.5, 4, fuse=fuse, grads=grads)
-    jaxpr = _trace_shardmap(comp, grads).jaxpr
+    rows, conds = _inventory(comp, grads)
 
-    conds = _find_eqns(jaxpr, "cond")
     assert len(conds) == 1  # one lazy group -> one dispatch point
 
     # outside the cond: exactly the fused decision psum, nothing else
-    outside = _collectives_in(jaxpr, enter_cond=False)
+    outside = [r.kind for r in rows if r.cond is None]
     assert outside == ["psum"], (method, fuse, outside)
+    assert rows[0].tagged("lazy.decision") or outside != ["psum"]
 
     # branches[0] is the false (skip) branch, branches[1] the fire branch
-    skip, fire = conds[0].params["branches"]
-    skip_colls = _collectives_in(skip.jaxpr)
-    fire_colls = _collectives_in(fire.jaxpr)
+    skip_colls = conds[0].branch_kinds(0)
+    fire_colls = conds[0].branch_kinds(1)
     assert skip_colls == [], (method, fuse, skip_colls)
     assert "all_gather" in fire_colls, (method, fuse, fire_colls)
     if method in ("qsgd", "lq_sgd"):  # quantizers also sync their scales
@@ -182,10 +139,10 @@ def test_group_collectives_only_in_fire_branch(method, fuse):
 def test_gate_mode_traces_no_cond():
     grads = _grads(jax.random.PRNGKey(0))
     comp = _composite("lq_sgd", 1.5, 4, fuse=True, mode="gate", grads=grads)
-    jaxpr = _trace_shardmap(comp, grads).jaxpr
-    assert _find_eqns(jaxpr, "cond") == []
+    rows, conds = _inventory(comp, grads)
+    assert conds == []
     # the gate traces the group collectives unconditionally
-    assert "all_gather" in _collectives_in(jaxpr)
+    assert "all_gather" in [r.kind for r in rows]
 
 
 def test_adaptive_scaling_adds_no_collectives():
@@ -193,8 +150,8 @@ def test_adaptive_scaling_adds_no_collectives():
     decision stats and the already-uniform selected aggregate."""
     grads = _grads(jax.random.PRNGKey(0))
     comp = _composite("lq_sgd", 1.5, 4, fuse=True, adaptive=4.0, grads=grads)
-    jaxpr = _trace_shardmap(comp, grads).jaxpr
-    assert _collectives_in(jaxpr, enter_cond=False) == ["psum"]
+    rows, _ = _inventory(comp, grads)
+    assert [r.kind for r in rows if r.cond is None] == ["psum"]
 
 
 def test_lazy_mode_validation():
@@ -351,7 +308,9 @@ def test_assert_replicated():
 _ELISION_SUBPROC = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    import json, re, jax, numpy as np
+    import json, jax, numpy as np
+    from repro.analysis.hlo import parse_module
+    from repro.analysis.inventory import hlo_inventory
     from repro.configs.base import ModelConfig, attn
     from repro.core import CompressorConfig
     from repro.data.synthetic import LMDataConfig, lm_batch
@@ -380,48 +339,14 @@ _ELISION_SUBPROC = textwrap.dedent("""
                              st_sh)
         hlo = jstep.lower(state, bf(0)).compile().as_text()
 
-        # split the HLO text into computation blocks (defs start at col 0)
-        blocks, cur = {}, None
-        for line in hlo.splitlines():
-            if not line[:1].isspace() and line.rstrip().endswith("{"):
-                m = re.search(r"%([\\w.-]+)", line)
-                cur = m.group(1) if m else None
-                if cur: blocks[cur] = []
-            elif cur and line.strip() != "}":
-                blocks[cur].append(line)
-
-        def colls(name, seen=None):
-            seen = set() if seen is None else seen
-            if name in seen or name not in blocks: return []
-            seen.add(name)
-            got = []
-            for l in blocks[name]:
-                got += re.findall(r"(all-gather|all-reduce|all-to-all"
-                                  r"|collective-permute)", l)
-                for callee in re.findall(
-                        r"(?:calls=|to_apply=)%([\\w.-]+)", l):
-                    got += colls(callee, seen)
-            return got
-
-        cond_lines = [l for b in blocks.values() for l in b
-                      if " conditional(" in l]
-        out["n_conditionals"] = len(cond_lines)
-        branch_counts = []
-        for l in cond_lines:
-            t = re.search(r"true_computation=%([\\w.-]+)", l)
-            f = re.search(r"false_computation=%([\\w.-]+)", l)
-            if t and f:
-                names = [f.group(1), t.group(1)]
-            else:
-                names = re.findall(r"%([\\w.-]+)",
-                                   re.search(r"branch_computations="
-                                             r"\\{([^}]*)\\}", l).group(1))
-            branch_counts.append([len(colls(n, set())) for n in names])
-        out["branch_collectives"] = branch_counts
-        entry = [n for n in blocks
-                 if any(" conditional(" in l for l in blocks[n])]
+        # the graph linter's inventory: conditional sites with per-branch
+        # collective rows, plus every collective's enclosing branch
+        rows, conds = hlo_inventory(parse_module(hlo))
+        out["n_conditionals"] = len(conds)
+        out["branch_collectives"] = [[len(b) for b in c.branches]
+                                     for c in conds]
         out["outside_all_reduce"] = sum(
-            1 for n in entry for l in blocks[n] if "all-reduce" in l)
+            1 for r in rows if r.kind == "all-reduce" and r.cond is None)
 
         runner = AsyncRunner(jstep, bf, RuntimeConfig(steps=4, log_every=100,
                                                       verbose=False))

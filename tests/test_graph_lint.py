@@ -1,0 +1,264 @@
+"""Mutation tests for the graph linter (repro.analysis).
+
+Each test seeds one specific violation and asserts the linter reports the
+RIGHT rule id at the RIGHT location — proving every rule actually fires,
+not just that clean graphs pass. Traces run on abstract shapes under a
+1-device shard_map (collective structure is mesh-shape independent at the
+jaxpr level), so the whole file stays in the fast tier.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.analysis.hlo import parse_module
+from repro.analysis.inventory import CollectiveRow, jaxpr_inventory
+from repro.analysis.rules import LintContext, run_rules
+from repro.analysis.trace import trace_sync_jaxpr
+from repro.core import (CompositeCompressor, CompressorConfig, LeafPolicy,
+                        PolicySchedule)
+from repro.core import lazy as lazy_mod
+from repro.core.lq_sgd import LQSGDHandler
+
+GRADS = {
+    "w": jax.ShapeDtypeStruct((64, 32), jax.numpy.float32),
+    "b": jax.ShapeDtypeStruct((32,), jax.numpy.float32),
+    "scan": jax.ShapeDtypeStruct((3, 48, 16), jax.numpy.float32),
+}
+STACKED = {"w": False, "b": False, "scan": True}
+
+
+def _composite(method="lq_sgd", *, thresh=1.5, mode="elide", warmup=0,
+               wire="allgather_codes", fuse=True):
+    cfg = CompressorConfig(name=method, rank=2, bits=8, topk_ratio=0.1,
+                           fuse_collectives=fuse, lazy_mode=mode, wire=wire,
+                           warmup_steps=warmup)
+    pols = [LeafPolicy(method=method, rank=2, topk_ratio=0.1,
+                       lazy_thresh=thresh, max_stale=4)] * 3
+    return CompositeCompressor(cfg, GRADS, STACKED, policies=pols,
+                               schedule=PolicySchedule(warmup_steps=warmup))
+
+
+def _ctx(comp, **kw):
+    rows, conds = jaxpr_inventory(trace_sync_jaxpr(comp, GRADS))
+    return LintContext(compressor=comp, jaxpr_rows=rows, jaxpr_conds=conds,
+                       **kw)
+
+
+def _failing(report):
+    return {r.rule: r for r in report.results if r.status == "fail"}
+
+
+# --------------------------------------------------------------------------
+# the clean baseline: every rule passes (or is skipped for a missing level)
+# --------------------------------------------------------------------------
+
+def test_clean_lazy_composite_passes_every_rule():
+    report = run_rules(_ctx(_composite()))
+    assert _failing(report) == {}, report.to_json()
+    assert report.ok
+    ran = {r.rule for r in report.results if r.status == "pass"}
+    assert {"elision-containment", "accounting-parity",
+            "shadow-collective-ban", "wire-dtype-hygiene"} <= ran
+    # no HLO artifact -> donation rule skips, never silently passes
+    by = {r.rule: r.status for r in report.results}
+    assert by["donation-aliasing"] == "skipped"
+
+
+def test_report_json_schema():
+    rep = run_rules(_ctx(_composite()), target={"arch": "unit"})
+    js = rep.to_json()
+    assert js["target"]["arch"] == "unit"
+    assert js["ok"] is True
+    assert js["summary"]["jaxpr_collectives"] > 0
+    assert len(js["rules"]) == 6
+    assert all({"id", "level", "status", "findings", "note"} <= set(r)
+               for r in js["rules"])
+
+
+# --------------------------------------------------------------------------
+# one seeded violation per rule
+# --------------------------------------------------------------------------
+
+def test_gate_mode_trips_elision_containment():
+    report = run_rules(_ctx(_composite(mode="gate")))
+    fails = _failing(report)
+    assert set(fails) == {"elision-containment"}, report.to_json()
+    fs = fails["elision-containment"].findings
+    assert all(f.location == "lazy group 'lq_sgd'" for f in fs)
+    # both symptoms named: no dispatch cond, payloads unconditional
+    assert any("lax.cond" in f.message for f in fs)
+    assert any("unconditionally" in f.message for f in fs)
+
+
+def test_doctored_wire_accounting_trips_parity(monkeypatch):
+    comp = _composite()
+    ctx = _ctx(comp)
+    orig = LQSGDHandler.leaf_physical_bits
+    monkeypatch.setattr(LQSGDHandler, "leaf_physical_bits",
+                        lambda self, pl: orig(self, pl) + 7)
+    fails = _failing(run_rules(ctx))
+    assert set(fails) == {"accounting-parity"}
+    f = fails["accounting-parity"].findings[0]
+    assert f.location == "method group 'lq_sgd'"
+    assert "-21 bits" in f.message  # 3 leaves x 7 doctored bits
+
+
+def test_doctored_decision_constant_trips_parity(monkeypatch):
+    ctx = _ctx(_composite())
+    monkeypatch.setattr(lazy_mod, "DECISION_BITS_PER_GROUP", 1024)
+    fails = _failing(run_rules(ctx))
+    assert "accounting-parity" in fails
+    assert any(f.location == "lazy group 'lq_sgd'"
+               for f in fails["accounting-parity"].findings)
+
+
+def test_sharded_stale_spec_trips_predicate_uniformity():
+    ctx = _ctx(_composite(),
+               state_specs={lazy_mod.STALE_NS: {"lq_sgd": P("model")}})
+    fails = _failing(run_rules(ctx))
+    assert set(fails) == {"predicate-uniformity"}
+    f = fails["predicate-uniformity"].findings[0]
+    assert f.location == "state namespace 'lazy_stale'"
+    assert "not replicated" in f.message
+
+
+_HLO_NO_ALIAS = """\
+HloModule jit_step
+
+ENTRY %main.3 (p0.1: f32[4]) -> f32[4] {
+  %p0.1 = f32[4] parameter(0)
+  ROOT %copy.2 = f32[4] copy(%p0.1)
+}
+"""
+
+_HLO_ALIASED = _HLO_NO_ALIAS.replace(
+    "HloModule jit_step",
+    "HloModule jit_step, input_output_alias={ {}: (0, {}, may-alias) }")
+
+
+def test_missing_alias_trips_donation_aliasing():
+    ctx = LintContext(compressor=_composite(),
+                      hlo_module=parse_module(_HLO_NO_ALIAS),
+                      expect_donation=True)
+    fails = _failing(run_rules(ctx))
+    assert set(fails) == {"donation-aliasing"}
+    f = fails["donation-aliasing"].findings[0]
+    assert f.location == "module header"
+    assert "input_output_alias" in f.message
+
+
+def test_present_alias_passes_donation_aliasing():
+    ctx = LintContext(compressor=_composite(),
+                      hlo_module=parse_module(_HLO_ALIASED),
+                      expect_donation=True)
+    assert "donation-aliasing" not in _failing(run_rules(ctx))
+
+
+def test_stale_warmup_graph_trips_shadow_ban():
+    """A warm graph presented as the steady-state phase: the schedule says
+    warm-up is over, but the traced graph still ships the fp32 shadow."""
+    warm = _composite(warmup=3)
+    rows, conds = jaxpr_inventory(trace_sync_jaxpr(warm, GRADS))
+    assert any(r.tagged("comp.warmup_shadow") for r in rows)  # sanity
+    steady = warm.at_step(10)  # schedule: warm-up finished
+    ctx = LintContext(compressor=steady, jaxpr_rows=rows, jaxpr_conds=conds)
+    fails = _failing(run_rules(ctx))
+    assert "shadow-collective-ban" in fails
+    f = fails["shadow-collective-ban"].findings[0]
+    assert f.location == "warmup shadow"
+
+
+def test_untagged_fat_collective_trips_shadow_ban():
+    ctx = _ctx(_composite())
+    ctx.jaxpr_rows = ctx.jaxpr_rows + [CollectiveRow(
+        kind="psum", dtype="float32", shape=(1024,), bits=1024 * 32,
+        tag="", cond=None, level="jaxpr")]
+    fails = _failing(run_rules(ctx))
+    assert "shadow-collective-ban" in fails
+    assert fails["shadow-collective-ban"].findings[0].location == "<untagged>"
+
+
+def test_psum_sim_trips_wire_dtype_hygiene():
+    report = run_rules(_ctx(_composite(wire="psum_sim")))
+    fails = _failing(report)
+    assert "wire-dtype-hygiene" in fails
+    f = fails["wire-dtype-hygiene"].findings[0]
+    assert f.location == "method group 'lq_sgd'"
+    assert "psum_sim" in f.message
+
+
+def test_upcast_gather_trips_wire_dtype_hygiene():
+    """An fp32 gather tagged as lq_sgd payload = codes silently upcast
+    between encode and the collective."""
+    ctx = _ctx(_composite())
+    ctx.jaxpr_rows = ctx.jaxpr_rows + [CollectiveRow(
+        kind="all_gather", dtype="float32", shape=(64, 2), bits=64 * 2 * 32,
+        tag="comp.lq_sgd.lazy", cond=(0, 1), level="jaxpr")]
+    fails = _failing(run_rules(ctx))
+    assert "wire-dtype-hygiene" in fails
+    assert any("implicit upcast" in f.message
+               for f in fails["wire-dtype-hygiene"].findings)
+
+
+# --------------------------------------------------------------------------
+# the CLI contract (used by CI's graph-lint job and the README recipe)
+# --------------------------------------------------------------------------
+
+def test_cli_json_contract(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    out_json = tmp_path / "lint.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", "--arch", "gemma3-1b",
+         "--smoke", "--compressor", "lq_sgd", "--lazy-thresh", "0.05",
+         "--level", "jaxpr", "--json", "--out", str(out_json)],
+        env=env, capture_output=True, text=True, timeout=560)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    js = json.loads(proc.stdout)
+    assert js["ok"] is True
+    assert js == json.loads(out_json.read_text())
+    rules = {r["id"]: r for r in js["rules"]}
+    assert rules["elision-containment"]["status"] == "pass"
+    assert rules["accounting-parity"]["status"] == "pass"
+    assert js["summary"]["jaxpr_collectives"] > 0
+
+
+def test_cli_rejects_unknown_arch():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", "--arch", "nope"],
+        env=env, capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 2
+    assert "unknown --arch" in proc.stderr
+
+
+def test_gate_mode_cli_exits_nonzero():
+    """End to end: a seeded violation drives the CLI's exit code (what the
+    CI gate keys on)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", "--arch", "gemma3-1b",
+         "--smoke", "--lazy-thresh", "0.05", "--lazy-mode", "gate",
+         "--level", "jaxpr", "--json"],
+        env=env, capture_output=True, text=True, timeout=560)
+    assert proc.returncode == 1, proc.stderr[-3000:]
+    js = json.loads(proc.stdout)
+    assert js["ok"] is False
+    rules = {r["id"]: r for r in js["rules"]}
+    assert rules["elision-containment"]["status"] == "fail"
+
+
+@pytest.mark.parametrize("method", ["topk", "qsgd", "powersgd", "lq_sgd"])
+def test_every_method_group_lints_clean(method):
+    report = run_rules(_ctx(_composite(method)))
+    assert _failing(report) == {}, report.to_json()

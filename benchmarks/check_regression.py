@@ -49,6 +49,7 @@ import time
 CC = "BENCH_comm_cost.json"
 ST = "BENCH_step_time.json"
 GL = "BENCH_graph_lint.json"
+SV = "BENCH_serve.json"
 
 HISTORY = "BENCH_history.jsonl"
 
@@ -70,6 +71,12 @@ HISTORY_SERIES = [
     # graph-lint headline: collectives/step + payload bits per matrix
     # config (static accounting), plus each config's lint wall-clock
     (GL, "configs."),
+    # serving: tokens/sec + cache bytes/token per cache variant, and the
+    # q8-vs-fp32-loop speedup headline
+    (SV, "variants."),
+    (SV, "gate.q8_speedup_vs_fp32_loop"),
+    # cache-leakage SSIM/PSNR per cache variant (representation fidelity)
+    (SV, "leakage."),
 ]
 
 # (file, dotted-path prefix, lower_is_better, relative tolerance, hard)
@@ -82,6 +89,10 @@ RULES = [
     # collectives/step and payload bits from the graph linter are exact
     # static accounting: any growth is a real graph change
     (GL, "configs.", True, 0.01, True),
+    # serving cache bytes/token + capacity are deterministic layout
+    # accounting (the issue's hard gate); tokens/sec and parity diffs under
+    # the same prefix are wall-clock / float-noise and ride in SOFT_KEYS
+    (SV, "variants.", True, 0.02, True),
     ("BENCH_step_time.json", "", True, 0.50, False),
     ("BENCH_convergence.json", "", True, 0.50, False),
     ("BENCH_privacy.json", "", True, 0.50, False),
@@ -101,6 +112,9 @@ SOFT_KEYS = [
     "schema",
     "fire_rate",
     "lint_s",
+    "per_sec",
+    "maxdiff",
+    "rel_vs",
 ]
 
 # metrics where a DROP (not growth) is the bad direction, overriding the
@@ -169,6 +183,28 @@ def check_lazy_gate(fresh_dir):
     if gl is not None and not gl.get("all_ok"):  # lint gate (PR: graph lint)
         bad = [c["name"] for c in gl.get("configs", []) if not c.get("ok")]
         out.append(f"HARD: graph-lint findings in config(s): {', '.join(bad)}")
+    sv = _load(os.path.join(fresh_dir, SV))
+    if sv is not None:  # serving gate (PR: quantized KV cache)
+        g = sv.get("gate", {})
+        if not g.get("accounting_ok"):
+            vs = sv.get("variants", [])
+            ratios = [(v["name"], v["accounting_ratio"]) for v in vs]
+            out.append(
+                "HARD: serve cache bytes/token diverged from wire_bits "
+                f"accounting beyond {g.get('accounting_tol')}: {ratios}"
+            )
+        if not g.get("parity_ok"):
+            out.append(
+                "HARD: quantized-cache decode logits left the documented "
+                f"tolerance band vs bf16: {g.get('parity_rel_tol')}"
+            )
+        if not g.get("speedup_ok"):  # wall-clock: warn-only by design
+            print(
+                "WARN: serve q8 speedup below target "
+                f"({g.get('q8_speedup_vs_fp32_loop')}x < "
+                f"{g.get('speedup_target')}x) — wall-clock, not gated",
+                file=sys.stderr,
+            )
     return out
 
 

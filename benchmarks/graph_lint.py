@@ -1,8 +1,11 @@
 """Graph-lint config matrix — the static-analysis leg of CI.
 
-Runs ``python -m repro.analysis.lint`` (subprocess per config: each needs
-its own ``--xla_force_host_platform_device_count``) over one config per
-architecture family, and fails if ANY rule reports findings:
+Runs a lint CLI (subprocess per config: each needs its own
+``--xla_force_host_platform_device_count``) over one config per
+architecture family, and fails if ANY rule reports findings. Each matrix
+entry names its lint module — ``repro.analysis.lint`` for the train step,
+``repro.analysis.serve`` for the serving decode step; both emit the same
+LintReport JSON:
 
   * ``dense_smoke``  — gemma3-1b smoke, lazy lq_sgd, jaxpr + compiled HLO
                        on a forced 2x1 host mesh (donation aliasing, the
@@ -14,7 +17,14 @@ architecture family, and fails if ANY rule reports findings:
                        (abstract trace: ~10 s, no compile) under the
                        ``REPRO_DRYRUN_DEVICES`` override the dry-run
                        tooling uses. This is the static verification leg
-                       of the 671B dry-run roadmap item.
+                       of the 671B dry-run roadmap item;
+  * ``serve_smoke_q8``— the compiled single-token decode step with a
+                       quantized (q8) KV cache on a data-only mesh:
+                       zero collectives, donated caches aliased, s8
+                       codes at the jit boundary;
+  * ``serve_smoke_mla``— decode on a model-parallel (1x2) mesh with the
+                       MLA latent cache: collective allowlist under
+                       seq-sharded cache reads.
 
 Headline counts (collectives/step, payload bits, conditionals — all
 deterministic static accounting) land in ``BENCH_graph_lint.json`` and the
@@ -33,32 +43,48 @@ import time
 
 BENCH_JSON = "BENCH_graph_lint.json"
 
-# (name, space-separated lint CLI args, extra env)
+# (name, lint module, space-separated CLI args, extra env)
 MATRIX = [
     (
         "dense_smoke",
+        "repro.analysis.lint",
         "--arch gemma3-1b --smoke --compressor lq_sgd --lazy-thresh 0.05 --mesh 2x1",
         {},
     ),
     (
         "moe_smoke",
+        "repro.analysis.lint",
         "--arch mixtral-8x7b --smoke --compressor lq_sgd --lazy-thresh 0.05 --mesh 2x1",
         {},
     ),
     (
         "ssm_smoke",
+        "repro.analysis.lint",
         "--arch mamba2-370m --smoke --compressor qsgd --bits 4 --lazy-thresh 0.05 --mesh 2x1",
         {},
     ),
     (
         "deepseek_671b",
+        "repro.analysis.lint",
         "--arch deepseek-v3-671b --compressor lq_sgd --lazy-thresh 0.05 --level jaxpr",
         {"REPRO_DRYRUN_DEVICES": "2"},
+    ),
+    (
+        "serve_smoke_q8",
+        "repro.analysis.serve",
+        "--arch gemma3-1b --smoke --cache-bits 8 --mesh 2x1",
+        {},
+    ),
+    (
+        "serve_smoke_mla",
+        "repro.analysis.serve",
+        "--arch deepseek-v3-671b --smoke --mesh 1x2",
+        {},
     ),
 ]
 
 
-def _lint_one(name, cli, env_extra):
+def _lint_one(name, module, cli, env_extra):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.pathsep.join(
         [os.path.abspath("src")] + env.get("PYTHONPATH", "").split(os.pathsep)
@@ -66,7 +92,7 @@ def _lint_one(name, cli, env_extra):
     env.update(env_extra)
     t0 = time.time()
     out = subprocess.run(
-        [sys.executable, "-m", "repro.analysis.lint", *cli.split(), "--json"],
+        [sys.executable, "-m", module, *cli.split(), "--json"],
         env=env,
         capture_output=True,
         text=True,
@@ -81,8 +107,8 @@ def _lint_one(name, cli, env_extra):
 def bench(quick: bool = False) -> tuple[list[tuple[str, float, str]], dict]:
     """Shared benchmarks.run contract: (csv rows, payload)."""
     rows, configs, failures = [], [], []
-    for name, cli, env_extra in MATRIX:
-        report, wall = _lint_one(name, cli, env_extra)
+    for name, module, cli, env_extra in MATRIX:
+        report, wall = _lint_one(name, module, cli, env_extra)
         statuses = {r["id"]: r["status"] for r in report["rules"]}
         n_pass = sum(1 for s in statuses.values() if s == "pass")
         s = report["summary"]
@@ -92,7 +118,13 @@ def bench(quick: bool = False) -> tuple[list[tuple[str, float, str]], dict]:
             "ok": report["ok"],
             "levels": report["target"].get("levels"),
             "lint_s": round(wall, 1),
-            "collectives_per_step": s.get("jaxpr_collectives"),
+            # serve reports count compiled-HLO collectives instead of
+            # jaxpr-level ones — same static-accounting gate either way
+            "collectives_per_step": (
+                s.get("jaxpr_collectives")
+                if "jaxpr_collectives" in s
+                else s.get("hlo_collectives")
+            ),
             "payload_bits_fired": s.get("jaxpr_payload_bits_fired_round"),
             "conditionals": s.get("hlo_conditionals"),
             "rules": statuses,

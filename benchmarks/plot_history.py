@@ -1,0 +1,271 @@
+"""Render the per-PR metric trajectories in BENCH_history.jsonl as SVG.
+
+    PYTHONPATH=src python -m benchmarks.plot_history \
+        [--history BENCH_history.jsonl] [--out BENCH_history.svg]
+
+``check_regression.py --append-history`` records one dated point of
+headline metrics per PR; this turns that JSONL into a small-multiples
+panel grid — wire MB/epoch, step-time speedups, steps/sec, serving
+tokens/sec + cache bytes/token, and the SSIM leakage rows — so the
+trajectory across PRs is a picture in the CI artifacts instead of a
+``jq`` session. Stdlib only (string-built SVG): CI runners and the
+container have no plotting deps, and the output diffs cleanly.
+
+Panels are curated by substring match over the flattened metric paths
+(see PANELS); a metric matching no panel is simply not drawn — the JSONL
+stays the source of truth. Points missing a series (metric added in a
+later PR) start the line late rather than dropping the panel.
+
+This file is ruff-format-clean (contract documented in pyproject.toml).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+HISTORY = "BENCH_history.jsonl"
+OUT = "BENCH_history.svg"
+
+# (title, y-label, [path substrings to include], [substrings to exclude])
+PANELS = [
+    ("wire cost", "MB/epoch", ["mb_per_epoch."], []),
+    (
+        "wall-clock speedups",
+        "x",
+        ["speedup"],
+        [],
+    ),
+    (
+        "train throughput",
+        "steps/s",
+        ["steps_per_s."],
+        [],
+    ),
+    (
+        "serving throughput",
+        "tokens/s",
+        ["variants.", "tokens_per_sec"],
+        [],
+    ),
+    (
+        "serving cache footprint",
+        "bytes/token",
+        ["variants.", "cache_bytes_per_token"],
+        [],
+    ),
+    (
+        "cache leakage (SSIM)",
+        "ssim",
+        ["leakage.", "ssim"],
+        [],
+    ),
+    (
+        "collectives per step",
+        "count",
+        ["collectives"],
+        ["ratio"],
+    ),
+]
+
+PALETTE = [
+    "#1f77b4",
+    "#ff7f0e",
+    "#2ca02c",
+    "#d62728",
+    "#9467bd",
+    "#8c564b",
+    "#e377c2",
+    "#17becf",
+    "#bcbd22",
+    "#7f7f7f",
+]
+
+W, H = 420, 260  # per-panel box
+PAD_L, PAD_R, PAD_T, PAD_B = 52, 12, 28, 40
+COLS = 2
+
+
+def load_points(path):
+    points = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                points.append(json.loads(line))
+    return points
+
+
+def series_for(points, includes, excludes):
+    """{metric path: [(point index, value), ...]} for matching metrics."""
+    out = {}
+    for i, pt in enumerate(points):
+        for key, val in pt.get("metrics", {}).items():
+            inc = all(s in key for s in includes)
+            exc = any(s in key for s in excludes)
+            if inc and not exc:
+                out.setdefault(key, []).append((i, float(val)))
+    return out
+
+
+def _short(key):
+    """Legend label: drop the file prefix and shared path boilerplate."""
+    key = key.split(":", 1)[-1]
+    for drop in ("lazy_elision.", "lazy_sweep.", "policy_sweep.", "gate."):
+        key = key.replace(drop, "")
+    return key if len(key) <= 46 else "..." + key[-43:]
+
+
+def _esc(s):
+    return str(s).replace("&", "&amp;").replace("<", "&lt;").replace(">", "&gt;")
+
+
+def _fmt(v):
+    if v == 0:
+        return "0"
+    if abs(v) >= 1000 or abs(v) < 0.01:
+        return f"{v:.2g}"
+    return f"{v:.3g}"
+
+
+def render_panel(x0, y0, title, ylab, series, labels):
+    """SVG fragment for one panel at (x0, y0)."""
+    n = len(labels)
+    vals = [v for pts in series.values() for _, v in pts]
+    if not vals:
+        return ""
+    lo, hi = min(vals), max(vals)
+    if math.isclose(lo, hi):
+        lo, hi = lo - 0.5 * abs(lo or 1.0), hi + 0.5 * abs(hi or 1.0)
+    span = hi - lo
+    lo, hi = lo - 0.06 * span, hi + 0.06 * span
+    iw = W - PAD_L - PAD_R
+    ih = H - PAD_T - PAD_B
+
+    def sx(i):
+        frac = 0.5 if n <= 1 else i / (n - 1)
+        return x0 + PAD_L + frac * iw
+
+    def sy(v):
+        return y0 + PAD_T + (1 - (v - lo) / (hi - lo)) * ih
+
+    parts = [
+        f'<rect x="{x0 + PAD_L}" y="{y0 + PAD_T}" width="{iw}" '
+        f'height="{ih}" fill="#fafafa" stroke="#ddd"/>',
+        f'<text x="{x0 + PAD_L}" y="{y0 + 18}" class="title">'
+        f"{_esc(title)}</text>",
+        f'<text x="{x0 + 14}" y="{y0 + PAD_T + ih / 2}" class="ylab" '
+        f'transform="rotate(-90 {x0 + 14} {y0 + PAD_T + ih / 2})">'
+        f"{_esc(ylab)}</text>",
+    ]
+    for frac in (0.0, 0.5, 1.0):  # gridlines + y tick labels
+        v = lo + frac * (hi - lo)
+        parts.append(
+            f'<line x1="{x0 + PAD_L}" y1="{sy(v):.1f}" '
+            f'x2="{x0 + PAD_L + iw}" y2="{sy(v):.1f}" class="grid"/>'
+        )
+        parts.append(
+            f'<text x="{x0 + PAD_L - 4}" y="{sy(v) + 3:.1f}" '
+            f'class="tick" text-anchor="end">{_fmt(v)}</text>'
+        )
+    for i, lab in enumerate(labels):  # x tick labels = point labels
+        parts.append(
+            f'<text x="{sx(i):.1f}" y="{y0 + PAD_T + ih + 14}" '
+            f'class="tick" text-anchor="middle">{_esc(lab)}</text>'
+        )
+    legend_y = y0 + PAD_T + ih + 26
+    for ci, (key, pts) in enumerate(sorted(series.items())):
+        color = PALETTE[ci % len(PALETTE)]
+        coords = " ".join(f"{sx(i):.1f},{sy(v):.1f}" for i, v in pts)
+        if len(pts) > 1:
+            parts.append(
+                f'<polyline points="{coords}" fill="none" '
+                f'stroke="{color}" stroke-width="1.6"/>'
+            )
+        for i, v in pts:
+            parts.append(
+                f'<circle cx="{sx(i):.1f}" cy="{sy(v):.1f}" r="2.6" '
+                f'fill="{color}"><title>{_esc(key)} = {_fmt(v)}'
+                f"</title></circle>"
+            )
+        if ci < 6:  # legend: first six series, hover titles cover the rest
+            lx = x0 + PAD_L + (ci % 2) * (iw // 2)
+            ly = legend_y + (ci // 2) * 11
+            parts.append(
+                f'<line x1="{lx}" y1="{ly - 3}" x2="{lx + 12}" '
+                f'y2="{ly - 3}" stroke="{color}" stroke-width="2"/>'
+            )
+            parts.append(
+                f'<text x="{lx + 16}" y="{ly}" class="legend">'
+                f"{_esc(_short(key))}</text>"
+            )
+    if len(series) > 6:
+        parts.append(
+            f'<text x="{x0 + PAD_L}" y="{legend_y + 33}" class="legend">'
+            f"(+{len(series) - 6} more — hover points)</text>"
+        )
+    return "\n".join(parts)
+
+
+def render(points, out_path):
+    labels = [
+        p.get("label") or (p.get("ts") or "")[:10] or str(i)
+        for i, p in enumerate(points)
+    ]
+    panels = []
+    for title, ylab, inc, exc in PANELS:
+        series = series_for(points, inc, exc)
+        if series:
+            panels.append((title, ylab, series))
+    if not panels:
+        raise SystemExit("no matching metrics in history — nothing to plot")
+    rows = (len(panels) + COLS - 1) // COLS
+    # extra bottom room per panel for the 2-column legend block
+    ph = H + 6 + 11 * ((min(6, max(len(s) for _, _, s in panels)) + 1) // 2)
+    total_w, total_h = COLS * W, rows * ph + 24
+    body = [
+        f'<svg xmlns="http://www.w3.org/2000/svg" width="{total_w}" '
+        f'height="{total_h}" viewBox="0 0 {total_w} {total_h}" '
+        f'font-family="system-ui, sans-serif">',
+        "<style>"
+        ".title{font-size:13px;font-weight:600;fill:#333}"
+        ".ylab{font-size:10px;fill:#666}"
+        ".tick{font-size:9px;fill:#666}"
+        ".legend{font-size:9px;fill:#444}"
+        ".grid{stroke:#e5e5e5;stroke-width:1}"
+        "</style>",
+        f'<rect width="{total_w}" height="{total_h}" fill="white"/>',
+        f'<text x="{total_w / 2}" y="{total_h - 8}" class="tick" '
+        f'text-anchor="middle">BENCH_history.jsonl — {len(points)} '
+        f"point(s)</text>",
+    ]
+    for j, (title, ylab, series) in enumerate(panels):
+        x0, y0 = (j % COLS) * W, (j // COLS) * ph
+        body.append(render_panel(x0, y0, title, ylab, series, labels))
+    body.append("</svg>")
+    with open(out_path, "w") as f:
+        f.write("\n".join(body) + "\n")
+    return len(panels)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--history", default=HISTORY)
+    ap.add_argument("--out", default=OUT)
+    args = ap.parse_args()
+    if not os.path.exists(args.history):
+        print(f"error: {args.history} not found", file=sys.stderr)
+        sys.exit(2)
+    points = load_points(args.history)
+    if not points:
+        print(f"error: {args.history} is empty", file=sys.stderr)
+        sys.exit(2)
+    n = render(points, args.out)
+    print(f"wrote {args.out}: {n} panel(s), {len(points)} history point(s)")
+
+
+if __name__ == "__main__":
+    main()

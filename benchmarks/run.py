@@ -25,6 +25,11 @@ Prints ``name,us_per_call,derived`` CSV (scaffold contract):
                      graph over a config matrix (dense/MoE/SSM smokes +
                      the full 671B abstract trace); any rule finding fails
                      the section — this is CI's graph-lint gate
+  * serve         -> quantized-KV-cache serving: tokens/sec for the old
+                     per-token fp32 loop vs the on-device scan driver at
+                     bf16/q8/q4, cache bytes/token vs wire accounting
+                     (hard gate), capacity at fixed HBM, cache-leakage
+                     SSIM/PSNR rows
 
 Every section module implements the shared JSON contract:
 
@@ -59,7 +64,7 @@ def main() -> None:
 
     from benchmarks import (comm_cost, convergence, gia_ssim, graph_lint,
                             lazy_elision, lazy_sweep, policy_sweep,
-                            quant_kernel, step_time)
+                            quant_kernel, serve_throughput, step_time)
 
     # key-merging sections AFTER their owning file's section:
     # policy_sweep/lazy_sweep ride in BENCH_comm_cost.json, lazy_elision
@@ -72,6 +77,7 @@ def main() -> None:
         "step_time": step_time,
         "lazy_elision": lazy_elision,
         "graph_lint": graph_lint,
+        "serve": serve_throughput,
         "convergence": convergence,
         "gia_ssim": gia_ssim,
     }

@@ -21,7 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 __all__ = ["log_quantize_pallas", "log_dequantize_pallas",
-           "log_quantize_pack_pallas", "pack_nibbles_pallas"]
+           "log_quantize_pack_pallas", "pack_nibbles_pallas",
+           "log_dequantize_rows_pallas"]
 
 
 def _quantize_kernel(x_ref, scale_ref, o_ref, *, alpha: float, levels: int):
@@ -185,6 +186,72 @@ def log_quantize_pack_pallas(x: jax.Array, scale: jax.Array, *,
         interpret=interpret,
     )(x2, scale2)
     return _unpad(y2, (-(-n // 2),), -(-n // 2))
+
+
+def _dequant_rows_kernel(c_ref, s_ref, o_ref, *, alpha: float, levels: int,
+                         packed: bool):
+    """Per-ROW scaled dequantize (the KV-cache read path).
+
+    ``c_ref`` is a (bm, bn) int8 block — raw b=8 codes, or nibble-packed
+    b<=4 bytes when ``packed`` — and ``s_ref`` a (bm, 1) float32 block of
+    per-row scales (one scale per cache block = one token's head_dim row),
+    broadcast across the row. The unpack interleave stays in-kernel so the
+    int codes never round-trip through HBM between unpack and expand."""
+    v = c_ref[...].astype(jnp.int32)
+    if packed:
+        v = v & 0xFF
+        lo = ((v & 0xF) ^ 8) - 8          # sign-extend low nibble
+        hi = (((v >> 4) & 0xF) ^ 8) - 8   # sign-extend high nibble
+        codes = jnp.stack([lo, hi], axis=-1).reshape(v.shape[0], -1)
+    else:
+        codes = v
+    q = codes.astype(jnp.float32) / levels
+    val = jnp.sign(q) * jnp.expm1(jnp.abs(q) * jnp.log1p(alpha)) / alpha
+    o_ref[...] = (val * s_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "alpha", "block_rows",
+                                             "interpret", "out_dtype"))
+def log_dequantize_rows_pallas(packed: jax.Array, scales: jax.Array, *,
+                               bits: int = 8, alpha: float = 10.0,
+                               block_rows: int = 256, interpret: bool = True,
+                               out_dtype=jnp.float32) -> jax.Array:
+    """Row-wise dequant-on-read: (R, nbytes) int8 + (R, 1) f32 -> (R, d).
+
+    Each row is one quantized KV-cache block (a token's head_dim slice)
+    with its own scale. For ``bits <= 4`` the input is nibble-packed (the
+    training-wire byte layout: byte i = codes[2i] | codes[2i+1] << 4) and
+    the output width is ``2 * nbytes``; for ``bits == 8`` it is 1:1. The
+    grid tiles rows only — cache rows are short (head_dim), so a block is
+    (block_rows, full width), lane-padded to keep the VPU happy.
+    """
+    if packed.ndim != 2 or scales.shape != (packed.shape[0], 1):
+        raise ValueError(f"want (R, nbytes) codes + (R, 1) scales, got "
+                         f"{packed.shape} / {scales.shape}")
+    levels = (1 << (bits - 1)) - 1
+    is_packed = bits <= 4
+    r, nb = packed.shape
+    rpad = (-r) % block_rows
+    cpad = (-nb) % 128  # lane-align the byte dim
+    c2 = jnp.pad(packed, ((0, rpad), (0, cpad)))
+    s2 = jnp.pad(scales, ((0, rpad), (0, 0)))
+    rows, cols = c2.shape
+    out_cols = cols * 2 if is_packed else cols
+    kernel = functools.partial(_dequant_rows_kernel, alpha=alpha,
+                               levels=levels, packed=is_packed)
+    y2 = pl.pallas_call(
+        kernel,
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, out_cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, out_cols), out_dtype),
+        interpret=interpret,
+    )(c2, s2)
+    d = nb * 2 if is_packed else nb
+    return y2[:r, :d]
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "alpha", "block", "interpret"))

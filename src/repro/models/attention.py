@@ -75,7 +75,11 @@ def _qkv(p: Params, x: jax.Array, spec: LayerSpec, cfg: ModelConfig,
 
 def decode_attend(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                   index: jax.Array, window: int | None) -> jax.Array:
-    """q (B, H, 1, hd) vs cache (B, Hkv, S, hd); keys j <= index visible."""
+    """q (B, H, 1, hd) vs cache (B, Hkv, S, hd); keys j <= index visible.
+
+    ``index`` may be a scalar (fixed-batch decode) or a (B,) vector of
+    per-request positions (continuous batching: each slot has its own
+    length, enforced here by the mask)."""
     b, h, _, hd = q.shape
     hkv = k_cache.shape[1]
     s = k_cache.shape[2]
@@ -86,10 +90,17 @@ def decode_attend(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
                         kc.astype(jnp.float32)) * scale
     j = jnp.arange(s)
-    mask = j <= index
-    if window is not None:
-        mask &= j > index - window
-    logits = jnp.where(mask[None, None, None, :], logits, -1e30)
+    if jnp.ndim(index) == 0:
+        mask = j <= index
+        if window is not None:
+            mask &= j > index - window
+        mask = mask[None, None, None, :]
+    else:
+        mask = j[None, :] <= index[:, None]                  # (B, S)
+        if window is not None:
+            mask &= j[None, :] > index[:, None] - window
+        mask = mask[:, None, None, :]
+    logits = jnp.where(mask, logits, -1e30)
     w = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhqk,bhkd->bhqd", w, vc.astype(jnp.float32))
     return out.astype(q.dtype)
@@ -110,21 +121,35 @@ def attn_forward(p: Params, x: jax.Array, spec: LayerSpec, cfg: ModelConfig, *,
     v = v.transpose(0, 2, 1, 3)
 
     if cache is not None and s == 1:
-        # -------- decode: append this token's K/V, attend over the cache
+        # -------- decode: append this token's K/V, attend over the cache.
+        # Cache leaves are raw arrays or QuantKV (log-quant codes + per-row
+        # scales, repro.serving.kv_cache): kv_update_token quantizes just
+        # the new rows, kv_read is the dequantize-on-read path. Lazy import
+        # keeps models/ free of a static serving dependency.
+        from repro.serving.kv_cache import kv_read, kv_update_token
         idx = cache_index
-        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), idx, axis=2)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), idx, axis=2)
-        out = decode_attend(q, k_cache, v_cache, idx, spec.window)
-        new_cache = {"k": k_cache, "v": v_cache}
+        k_leaf = kv_update_token(cache["k"], k, idx, axis=2)
+        v_leaf = kv_update_token(cache["v"], v, idx, axis=2)
+        out = decode_attend(q, kv_read(k_leaf), kv_read(v_leaf), idx,
+                            spec.window)
+        new_cache = {"k": k_leaf, "v": v_leaf}
     else:
         # -------- train / prefill: full causal (windowed) attention
+        from repro.serving.kv_cache import QuantKV, quantize_kv
         out = ops.flash_attention(q, k, v, causal=True, window=spec.window,
                                   backend=backend)
         if cache is not None:
-            max_s = cache["k"].shape[2]
+            ck, cv = cache["k"], cache["v"]
+            max_s = ck.codes.shape[2] if isinstance(ck, QuantKV) else ck.shape[2]
             pad = max_s - s
-            k_cache = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(cache["k"].dtype)
-            v_cache = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(cache["v"].dtype)
+            k_full = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            v_full = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            if isinstance(ck, QuantKV):
+                k_cache = quantize_kv(k_full, ck.bits, ck.alpha, ck.backend)
+                v_cache = quantize_kv(v_full, cv.bits, cv.alpha, cv.backend)
+            else:
+                k_cache = k_full.astype(ck.dtype)
+                v_cache = v_full.astype(cv.dtype)
             new_cache = {"k": k_cache, "v": v_cache}
         else:
             new_cache = None

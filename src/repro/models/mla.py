@@ -78,11 +78,15 @@ def mla_forward(p: Params, x: jax.Array, spec: LayerSpec, cfg: ModelConfig, *,
 
     if cache is not None and s == 1:
         # ---------------- absorbed decode over the latent cache ----------
+        # Latent-cache leaves may be QuantKV (log-quant codes + per-row
+        # scales); kv_update_token quantizes only the new row, kv_read
+        # dequantizes for the absorbed einsums (which run in f32 anyway).
+        from repro.serving.kv_cache import kv_read, kv_update_token
         idx = cache_index
-        ckv_c = jax.lax.dynamic_update_slice_in_dim(
-            cache["ckv"], ckv.astype(cache["ckv"].dtype), idx, axis=1)
-        kr_c = jax.lax.dynamic_update_slice_in_dim(
-            cache["krope"], k_rope.astype(cache["krope"].dtype), idx, axis=1)
+        ckv_leaf = kv_update_token(cache["ckv"], ckv, idx, axis=1)
+        kr_leaf = kv_update_token(cache["krope"], k_rope, idx, axis=1)
+        ckv_c = kv_read(ckv_leaf)
+        kr_c = kv_read(kr_leaf)
         wkv_b = p["wkv_b"].reshape(cfg.kv_lora_rank, h, nope + vdim)
         w_uk = wkv_b[..., :nope]                      # (rkv, H, nope)
         w_uv = wkv_b[..., nope:]                      # (rkv, H, vdim)
@@ -95,13 +99,17 @@ def mla_forward(p: Params, x: jax.Array, spec: LayerSpec, cfg: ModelConfig, *,
                              kr_c.astype(jnp.float32))
         scores *= 1.0 / float(qk_dim) ** 0.5
         smax = ckv_c.shape[1]
-        mask = jnp.arange(smax) <= idx
-        scores = jnp.where(mask[None, None, None, :], scores, -1e30)
+        j = jnp.arange(smax)
+        if jnp.ndim(idx) == 0:
+            mask = (j <= idx)[None, None, None, :]
+        else:                                   # per-request lengths (B,)
+            mask = (j[None, :] <= idx[:, None])[:, None, None, :]
+        scores = jnp.where(mask, scores, -1e30)
         w = jax.nn.softmax(scores, axis=-1)
         ctx_lat = jnp.einsum("bhts,bsr->bthr", w, ckv_c.astype(jnp.float32))
         out = jnp.einsum("bthr,rhv->bthv", ctx_lat, w_uv.astype(jnp.float32))
         out = out.astype(x.dtype).reshape(b, s, h * vdim)
-        new_cache = {"ckv": ckv_c, "krope": kr_c}
+        new_cache = {"ckv": ckv_leaf, "krope": kr_leaf}
     else:
         # ---------------- train / prefill: expand and flash --------------
         kv = (ckv @ p["wkv_b"].astype(x.dtype)).reshape(b, s, h, nope + vdim)
@@ -117,11 +125,19 @@ def mla_forward(p: Params, x: jax.Array, spec: LayerSpec, cfg: ModelConfig, *,
             backend=backend)
         out = out[..., :vdim].transpose(0, 2, 1, 3).reshape(b, s, h * vdim)
         if cache is not None:
-            smax = cache["ckv"].shape[1]
-            new_cache = {
-                "ckv": jnp.pad(ckv, ((0, 0), (0, smax - s), (0, 0))).astype(cache["ckv"].dtype),
-                "krope": jnp.pad(k_rope, ((0, 0), (0, smax - s), (0, 0))).astype(cache["krope"].dtype),
-            }
+            from repro.serving.kv_cache import QuantKV, quantize_kv
+            cc, cr = cache["ckv"], cache["krope"]
+            smax = cc.codes.shape[1] if isinstance(cc, QuantKV) else cc.shape[1]
+            ckv_f = jnp.pad(ckv, ((0, 0), (0, smax - s), (0, 0)))
+            kr_f = jnp.pad(k_rope, ((0, 0), (0, smax - s), (0, 0)))
+            if isinstance(cc, QuantKV):
+                new_cache = {
+                    "ckv": quantize_kv(ckv_f, cc.bits, cc.alpha, cc.backend),
+                    "krope": quantize_kv(kr_f, cr.bits, cr.alpha, cr.backend),
+                }
+            else:
+                new_cache = {"ckv": ckv_f.astype(cc.dtype),
+                             "krope": kr_f.astype(cr.dtype)}
         else:
             new_cache = None
 

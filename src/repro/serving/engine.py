@@ -24,17 +24,38 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.launch.sharding import param_specs
 from repro.models.model import forward, init_caches, init_params, stacked_flags
+from repro.serving.kv_cache import CacheQuantConfig, quantize_tree
 
 __all__ = ["cache_specs", "build_prefill_step", "build_decode_step",
-           "serve_shardings", "greedy_sample", "temperature_sample"]
+           "build_generate_fn", "init_serving_caches", "serve_shardings",
+           "greedy_sample", "temperature_sample"]
 
 
 def _dp_axes(mesh: Mesh) -> tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 
 
-def cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int) -> Any:
-    """PartitionSpec pytree matching init_caches output."""
+def init_serving_caches(cfg: ModelConfig, batch: int, max_seq: int,
+                        cache_dtype=jnp.bfloat16,
+                        qcfg: CacheQuantConfig | None = None) -> Any:
+    """Zero caches in the serving container format: raw ``cache_dtype``
+    arrays, or log-quant ``QuantKV`` leaves when ``qcfg.bits`` is 4/8."""
+    caches = init_caches(cfg, batch, max_seq, cache_dtype)
+    if qcfg is not None and qcfg.bits:
+        caches = quantize_tree(caches, qcfg)
+    return caches
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int, *,
+                cache_dtype=jnp.bfloat16,
+                qcfg: CacheQuantConfig | None = None) -> Any:
+    """PartitionSpec pytree matching :func:`init_serving_caches` output.
+
+    ``cache_dtype`` is threaded into the eval_shape so the spec tree is
+    built against exactly what gets allocated; with ``qcfg`` the tree
+    contains QuantKV nodes (codes + scale leaves share the raw leaf's
+    spec logic — their named dims are identical, only the last dim and
+    dtype differ, and the last dim is never sharded here)."""
     dp = _dp_axes(mesh)
     msize = mesh.shape["model"]
     ndp = 1
@@ -66,12 +87,15 @@ def cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int) -> Any:
         return P(None, *spec) if stacked else spec
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(
-        jax.eval_shape(lambda: init_caches(cfg, batch, 8, jnp.bfloat16)))
+        jax.eval_shape(lambda: init_serving_caches(cfg, batch, 8, cache_dtype,
+                                                   qcfg)))
     specs = [leaf_spec(jax.tree_util.keystr(kp), x) for kp, x in flat]
     return jax.tree_util.tree_unflatten(treedef, specs)
 
 
-def serve_shardings(cfg: ModelConfig, mesh: Mesh, batch: int):
+def serve_shardings(cfg: ModelConfig, mesh: Mesh, batch: int, *,
+                    cache_dtype=jnp.bfloat16,
+                    qcfg: CacheQuantConfig | None = None):
     """(param_shardings, cache_shardings, token_sharding)."""
     dp = _dp_axes(mesh)
     ndp = 1
@@ -83,7 +107,8 @@ def serve_shardings(cfg: ModelConfig, mesh: Mesh, batch: int):
                          axis_size=mesh.shape["model"], cfg=cfg)
     ns = lambda s: NamedSharding(mesh, s)
     p_sh = jax.tree.map(ns, pspecs)
-    c_sh = jax.tree.map(ns, cache_specs(cfg, mesh, batch))
+    c_sh = jax.tree.map(ns, cache_specs(cfg, mesh, batch,
+                                        cache_dtype=cache_dtype, qcfg=qcfg))
     batch_ax = dp if batch % max(ndp, 1) == 0 and batch >= ndp else None
     extra = 2 if cfg.n_codebooks else 1
     t_sh = ns(P(batch_ax, *([None] * extra)))
@@ -91,8 +116,17 @@ def serve_shardings(cfg: ModelConfig, mesh: Mesh, batch: int):
 
 
 def build_prefill_step(cfg: ModelConfig, max_seq: int, *, backend: str = "xla",
-                       cache_dtype=jnp.bfloat16, unroll_scan: bool = False):
-    """prefill(params, tokens[, cond]) -> (last-position logits, caches)."""
+                       cache_dtype=jnp.bfloat16, unroll_scan: bool = False,
+                       qcfg: CacheQuantConfig | None = None,
+                       full_logits: bool = False):
+    """prefill(params, tokens[, cond]) -> (logits, caches).
+
+    Logits are last-position (B, 1, V) by default; ``full_logits=True``
+    returns every position so a continuous-batching scheduler can prefill
+    right-padded prompt buckets and read position L-1 per request. With
+    ``qcfg`` the returned caches are log-quantized (QuantKV leaves) —
+    prefill attention itself runs on the raw K/V, only the stored cache is
+    compressed, so the quantization cost is paid exactly once per token."""
 
     def prefill(params, tokens, cond=None):
         b = tokens.shape[0]
@@ -100,7 +134,9 @@ def build_prefill_step(cfg: ModelConfig, max_seq: int, *, backend: str = "xla",
         logits, caches, _ = forward(params, tokens, cfg, caches=caches,
                                     cond=cond, backend=backend,
                                     unroll_scan=unroll_scan)
-        return logits[:, -1:], caches
+        if qcfg is not None and qcfg.bits:
+            caches = quantize_tree(caches, qcfg)
+        return (logits if full_logits else logits[:, -1:]), caches
 
     return prefill
 
@@ -116,6 +152,40 @@ def build_decode_step(cfg: ModelConfig, *, backend: str = "xla",
         return logits, caches
 
     return decode
+
+
+def build_generate_fn(cfg: ModelConfig, *, backend: str = "xla",
+                      unroll_scan: bool = False, temperature: float = 0.0):
+    """On-device decode driver: the sample -> append -> decode loop as ONE
+    ``lax.scan`` over generation steps, so serving pays one dispatch per
+    *chunk* instead of one per token (the old per-token Python loop blocks
+    on a host round-trip every step — that dispatch latency, not FLOPs,
+    dominates small-batch decode).
+
+    generate(params, caches, tokens, index, key, n_steps) ->
+        (caches, next_tokens, new_index, sampled (B, n_steps) int32)
+
+    ``index`` may be scalar or (B,) per-request positions (continuous
+    batching); ``n_steps`` is static. ``tokens`` is the (B, 1) token each
+    row decodes first. Jit with ``donate_argnums=(1,)`` so every scan step
+    updates the cache buffers in place — the serve graph lint checks the
+    aliasing actually holds in the compiled module."""
+    decode = build_decode_step(cfg, backend=backend, unroll_scan=unroll_scan)
+
+    def generate(params, caches, tokens, index, key, n_steps: int):
+        def body(carry, _):
+            caches, tok, idx, key = carry
+            logits, caches = decode(params, caches, tok, idx)
+            key, sub = jax.random.split(key)
+            nxt = temperature_sample(sub, logits[:, -1, :], temperature)
+            return (caches, nxt[:, None], idx + 1, key), nxt
+
+        carry = (caches, tokens, index, key)
+        (caches, tok, idx, key), sampled = jax.lax.scan(
+            body, carry, length=n_steps)
+        return caches, tok, idx, sampled.T  # (B, n_steps)
+
+    return generate
 
 
 def greedy_sample(logits: jax.Array) -> jax.Array:

@@ -1,0 +1,216 @@
+"""Continuous batching: paged admission + slot reuse over a fixed decode grid.
+
+The engine's decode step is shape-static — (slots, 1) tokens against
+(slots, ..., max_seq, ...) caches — so "continuous" batching here means the
+*scheduler* keeps that grid full: requests are admitted into free slots the
+moment capacity exists (no waiting for the whole batch to drain), each slot
+carries its own length (the per-request ``index`` vector masks attention
+and scatters cache writes at per-slot positions), and finished requests
+retire immediately so their slot and cache pages go back to the pool.
+
+Phases per :meth:`ContinuousScheduler.step`:
+
+  1. **admit** — while a slot is free AND the :class:`BlockPool` can hold
+     the request's worst-case pages (``len(prompt) + max_new`` tokens),
+     prefill the prompt alone (batch-1, right-padded to a pow2 bucket so
+     jit retraces O(log max_seq) shapes, full logits so position L-1 is
+     read regardless of padding) and insert its caches into the slot.
+  2. **decode** — one jitted ``lax.scan`` chunk (``decode_chunk`` tokens,
+     donated caches) advances EVERY active slot; per-slot positions come
+     from the host-tracked ``lengths`` vector. Idle slots compute masked
+     garbage — that is the price of the static grid, and exactly what the
+     admission loop minimizes.
+  3. **retire** — harvest sampled tokens, finish requests at ``max_new``
+     (or ``eos_id``), release their pages. A retired slot's stale cache
+     rows are never visible: admission overwrites the whole slot, and the
+     length mask hides everything past each slot's own position.
+
+Prefill-with-padding is only pad-safe for attention stacks (pad rows land
+beyond the causal mask and are overwritten by decode before entering any
+mask); SSM/Mamba rolling state folds pad tokens in irreversibly, so such
+configs are rejected at construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.serving.engine import (build_generate_fn, build_prefill_step,
+                                  init_serving_caches, temperature_sample)
+from repro.serving.kv_cache import BlockPool, CacheQuantConfig
+
+__all__ = ["Request", "ContinuousScheduler"]
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request (host-side bookkeeping)."""
+
+    uid: int
+    prompt: np.ndarray          # (L,) int32
+    max_new: int
+    out: list[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+
+    @property
+    def done(self) -> bool:
+        return self.slot == -2
+
+
+def _bucket(n: int, cap: int) -> int:
+    b = 8
+    while b < n:
+        b *= 2
+    return min(b, cap)
+
+
+class ContinuousScheduler:
+    """Admit/decode/retire loop over a fixed slot grid (see module doc)."""
+
+    def __init__(self, cfg: ModelConfig, params: Any, *, slots: int,
+                 max_seq: int, cache_dtype=jnp.bfloat16,
+                 qcfg: CacheQuantConfig | None = None,
+                 block_tokens: int = 16, n_blocks: int | None = None,
+                 temperature: float = 0.0, eos_id: int | None = None,
+                 backend: str = "xla", decode_chunk: int = 8, seed: int = 0):
+        specs = list(cfg.lead) + list(cfg.pattern) + list(cfg.tail)
+        if any(s.kind == "mamba" for s in specs):
+            raise ValueError("continuous scheduler requires attention-only "
+                             "stacks (SSM rolling state is not pad-safe)")
+        if cfg.cond_len or cfg.n_codebooks:
+            raise ValueError("conditioned / multi-codebook configs are not "
+                             "supported by the continuous scheduler")
+        self.cfg, self.params = cfg, params
+        self.slots, self.max_seq = slots, max_seq
+        self.temperature, self.eos_id = temperature, eos_id
+        self.decode_chunk = decode_chunk
+        self.pool = BlockPool(
+            n_blocks if n_blocks is not None
+            else slots * (-(-max_seq // block_tokens)), block_tokens)
+        self.caches = init_serving_caches(cfg, slots, max_seq, cache_dtype,
+                                          qcfg)
+        self._prefill = jax.jit(build_prefill_step(
+            cfg, max_seq, backend=backend, cache_dtype=cache_dtype,
+            qcfg=qcfg, full_logits=True))
+        self._generate = jax.jit(
+            build_generate_fn(cfg, backend=backend, temperature=temperature),
+            static_argnums=5, donate_argnums=1)
+        self._insert = jax.jit(self._insert_fn, donate_argnums=0)
+        self._key = jax.random.PRNGKey(seed)
+        self.lengths = np.zeros(slots, np.int32)   # per-slot next write pos
+        self.cur = np.zeros(slots, np.int32)       # per-slot pending token
+        self.active: dict[int, Request] = {}
+        self.waiting: deque[Request] = deque()
+        self.steps = 0
+
+    # ------------------------------------------------------------- plumbing
+    @staticmethod
+    def _insert_fn(serve_caches, one_caches, slot):
+        """Write a batch-1 cache tree into slot ``slot`` of the serving
+        grid. QuantKV leaves flatten to codes/scale arrays, so one
+        path-keyed tree_map covers raw and quantized containers; 'scan'
+        leaves carry a leading repeats dim (batch axis 1, else 0)."""
+
+        def ins(kp, s_leaf, o_leaf):
+            ax = 1 if "'scan'" in jax.tree_util.keystr(kp) else 0
+            return jax.lax.dynamic_update_slice_in_dim(
+                s_leaf, o_leaf.astype(s_leaf.dtype), slot, axis=ax)
+
+        return jax.tree_util.tree_map_with_path(ins, serve_caches, one_caches)
+
+    def _next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    # -------------------------------------------------------------- control
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) + req.max_new > self.max_seq:
+            raise ValueError(f"request {req.uid}: prompt+max_new "
+                             f"{len(req.prompt) + req.max_new} > max_seq "
+                             f"{self.max_seq}")
+        self.waiting.append(req)
+
+    def _admit(self) -> None:
+        free = [s for s in range(self.slots) if s not in self.active]
+        while self.waiting and free:
+            req = self.waiting[0]
+            need = len(req.prompt) + req.max_new
+            if not self.pool.can_alloc(need):
+                break                      # head-of-line blocks on pages
+            self.waiting.popleft()
+            slot = free.pop(0)
+            self.pool.alloc(req.uid, need)
+            ln = len(req.prompt)
+            bucket = _bucket(ln, self.max_seq)
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :ln] = req.prompt
+            logits, one = self._prefill(self.params, jnp.asarray(toks))
+            first = int(temperature_sample(
+                self._next_key(), logits[:, ln - 1, :], self.temperature)[0])
+            self.caches = self._insert(self.caches, one, jnp.int32(slot))
+            req.slot = slot
+            req.out.append(first)
+            self.lengths[slot] = ln
+            self.cur[slot] = first
+            self.active[slot] = req
+            if self._finished(req):        # max_new == 1 (or instant eos)
+                self._retire(slot)
+
+    def _finished(self, req: Request) -> bool:
+        return (len(req.out) >= req.max_new
+                or (self.eos_id is not None and req.out
+                    and req.out[-1] == self.eos_id))
+
+    def _retire(self, slot: int) -> None:
+        req = self.active.pop(slot)
+        self.pool.release(req.uid)
+        req.slot = -2
+
+    def step(self) -> int:
+        """One admit -> decode-chunk -> retire cycle; returns the number of
+        tokens harvested (0 when idle)."""
+        self._admit()
+        if not self.active:
+            return 0
+        caches, tok, _, sampled = self._generate(
+            self.params, self.caches, jnp.asarray(self.cur[:, None]),
+            jnp.asarray(self.lengths), self._next_key(), self.decode_chunk)
+        self.caches = caches
+        self.steps += 1
+        sampled = np.asarray(sampled)
+        harvested = 0
+        for slot in list(self.active):
+            req = self.active[slot]
+            take = min(self.decode_chunk, req.max_new - len(req.out))
+            chunk = sampled[slot, :take].tolist()
+            if self.eos_id is not None and self.eos_id in chunk:
+                chunk = chunk[:chunk.index(self.eos_id) + 1]
+            req.out.extend(chunk)
+            harvested += len(chunk)
+            self.lengths[slot] += len(chunk)
+            self.cur[slot] = req.out[-1]
+            if self._finished(req) or len(chunk) < take:
+                self._retire(slot)
+        return harvested
+
+    def run(self, requests: list[Request] | None = None,
+            max_steps: int = 100_000) -> dict[int, list[int]]:
+        """Drive until every submitted request completes."""
+        for r in requests or []:
+            self.submit(r)
+        done: dict[int, list[int]] = {}
+        for _ in range(max_steps):
+            if not self.waiting and not self.active:
+                break
+            self.step()
+        else:
+            raise RuntimeError("scheduler did not drain within max_steps")
+        for r in requests or []:
+            done[r.uid] = r.out
+        return done

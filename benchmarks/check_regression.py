@@ -60,6 +60,7 @@ HISTORY_SERIES = [
     (CC, "policy_sweep.uniform_best_wire_bits"),
     (CC, "lazy_sweep.gate.collectives_ratio"),
     (CC, "lazy_sweep.adaptive.fire_rate_windows"),
+    (CC, "federated.gate.wire_ratio"),
     (ST, "speedup_async_vs_sync"),
     (ST, "lazy_elision.speedup_elide_vs_gate"),
     (ST, "lazy_elision.speedup_elide_vs_eager"),
@@ -179,6 +180,17 @@ def check_lazy_gate(fresh_dir):
                 "HARD: adaptive-LAQ accuracy left the fixed-threshold "
                 f"band: {adaptive.get('acc')} vs {adaptive.get('fixed_acc')}"
             )
+    fed = payload.get("federated", {}).get("gate")
+    if fed is None:  # federated acceptance (PR: server wire)
+        hint = "run `benchmarks.run --only federated --json`"
+        out.append(f"HARD: federated.gate missing from {CC} ({hint})")
+    elif not fed.get("passed"):
+        out.append(
+            "HARD: federated gate failed: the participation-0.5 + "
+            "staleness row must reach effective wire bytes <= "
+            f"{fed.get('wire_ratio')} of eager at control-band accuracy "
+            f"({fed})"
+        )
     gl = _load(os.path.join(fresh_dir, GL))
     if gl is not None and not gl.get("all_ok"):  # lint gate (PR: graph lint)
         bad = [c["name"] for c in gl.get("configs", []) if not c.get("ok")]

@@ -1,0 +1,228 @@
+"""Federated scenarios on the server wire: participation x staleness x
+non-IID sweep (repro.core.wire ServerWire + the composite's per-worker
+lazy path).
+
+Each sweep point trains the mini-CNN under exact N-worker collective
+semantics with per-CLIENT batches — every worker samples its own shard
+(Dirichlet label skew when ``noniid_alpha > 0``, see
+``repro.data.synthetic.client_label_probs``) — through the server
+topology: workers draw independent per-round participation flags
+(straggler drop-out), decide fire/skip on their OWN innovation (no
+consensus psum), and the server aggregates with participation weights,
+reusing each absent worker's reference gradient exactly as LAQ's
+staleness model prescribes.
+
+Rows:
+
+* ``eager``          — symmetric wire, the control (wire ratio 1.0);
+* ``server_full``    — server wire at full participation: bit-for-bit
+  the control on the uplink (the refactor's free-abstraction bar), plus
+  the booked downlink broadcast;
+* ``dropout_p*``     — drop-out only: accuracy robustness to missing
+  workers at full per-round payload;
+* ``federated_gate`` — drop-out + per-worker laziness, the CI acceptance
+  row: effective wire bytes/round must reach ``<= GATE_RATIO x eager``
+  at accuracy within ``ACC_BAND`` of the control
+  (``benchmarks/check_regression.py`` hard-fails otherwise);
+* ``noniid_*``       — the gate point under Dirichlet label skew.
+
+Merged into BENCH_comm_cost.json under the ``federated`` key (shared
+``benchmarks.run`` contract + BENCH_KEY).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import AxisComm, CompressorConfig, make_compressor
+
+BENCH_JSON = "BENCH_comm_cost.json"
+BENCH_KEY = "federated"
+
+ACC_BAND = 0.02  # convergence proxy: acc within this of the eager control
+GATE_RATIO = 0.5  # acceptance: effective wire bytes <= 0.5x eager
+
+PER_CLIENT_BATCH = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class Point:
+    name: str
+    topology: str = "symmetric"
+    participation: float = 1.0
+    lazy_thresh: float = 0.0
+    max_stale: int = 4
+    noniid_alpha: float = 0.0
+    agg: str = "participation"
+
+
+SWEEP = (
+    Point("eager"),
+    Point("server_full", topology="server"),
+    Point("dropout_p0.5", topology="server", participation=0.5),
+    Point(
+        "federated_gate",
+        topology="server",
+        participation=0.5,
+        lazy_thresh=1.5,
+        max_stale=4,
+    ),
+    Point(
+        "noniid_a0.3",
+        topology="server",
+        participation=0.5,
+        lazy_thresh=1.5,
+        max_stale=4,
+        noniid_alpha=0.3,
+    ),
+)
+# --quick trims sweep points, not steps (the accuracy proxy needs the
+# full run to saturate); the gate row and its control always stay
+QUICK_SWEEP = (SWEEP[0], SWEEP[3], SWEEP[4])
+
+GATE_ROW = "federated_gate"
+
+
+def _config(pt: Point) -> CompressorConfig:
+    return CompressorConfig(
+        name="lq_sgd",
+        rank=1,
+        bits=8,
+        fuse_collectives=True,
+        lazy_thresh=pt.lazy_thresh,
+        max_stale=pt.max_stale,
+        topology=pt.topology,
+        participation=pt.participation,
+        agg=pt.agg,
+    )
+
+
+def train_federated(pt: Point, steps: int = 120, lr: float = 0.05, seed: int = 0):
+    """One sweep point: per-client batches through the chosen wire.
+
+    Returns (acc, losses, bits, colls, down_bits) per-step trajectories.
+    Unlike the IID loops, each worker gets its OWN client's batch (stable
+    per-client distribution), so the only thing tying workers together is
+    the wire — the worker-agreement assert below is the distributed
+    invariant the server broadcast must preserve.
+    """
+    from benchmarks.convergence import N_WORKERS, _accuracy, _init_cnn, _loss_fn
+    from repro.data.synthetic import ImageDataConfig, image_batch
+
+    data_cfg = ImageDataConfig(
+        batch=PER_CLIENT_BATCH,
+        hw=16,
+        seed=seed,
+        noniid_alpha=pt.noniid_alpha,
+        n_clients=N_WORKERS,
+    )
+    params = _init_cnn(jax.random.PRNGKey(seed))
+    comp = make_compressor(_config(pt), jax.eval_shape(lambda: params))
+    bcast = lambda t: jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (N_WORKERS,) + x.shape), t
+    )
+    state = bcast(comp.init_state(jax.random.PRNGKey(7)))
+    params = bcast(params)
+
+    def worker(params, comp_state, images, labels):
+        loss, g = jax.value_and_grad(_loss_fn)(params, images, labels)
+        g, comp_state, rec = comp.sync(g, comp_state, AxisComm(("data",)))
+        params = jax.tree.map(lambda w, gg: w - lr * gg, params, g)
+        return (
+            params,
+            comp_state,
+            jax.lax.pmean(loss, "data"),
+            jnp.asarray(rec.effective_bits(), jnp.float32),
+            jnp.asarray(rec.effective_collectives(), jnp.float32),
+            jnp.asarray(rec.down_bits, jnp.float32),
+        )
+
+    vworker = jax.jit(jax.vmap(worker, axis_name="data"))
+    losses, bits, colls, downs = [], [], [], []
+    for step in range(steps):
+        shards = [image_batch(data_cfg, step, client=c) for c in range(N_WORKERS)]
+        imgs = jnp.stack([s["images"] for s in shards])
+        lbls = jnp.stack([s["labels"] for s in shards])
+        params, state, loss, eb, ec, db = vworker(params, state, imgs, lbls)
+        losses.append(float(loss[0]))
+        bits.append(float(eb[0]))
+        colls.append(float(ec[0]))
+        downs.append(float(db[0]))
+    for leaf in jax.tree.leaves(params):  # the distributed invariant
+        np.testing.assert_allclose(
+            np.asarray(leaf[0]), np.asarray(leaf[1]), atol=1e-5
+        )
+    # accuracy on an IID held-out batch: the federated run must learn the
+    # GLOBAL distribution, whatever the clients' local skew
+    b = image_batch(dataclasses.replace(data_cfg, batch=128), 10_000)
+    p0 = jax.tree.map(lambda x: x[0], params)
+    acc = float(_accuracy(p0, b["images"], b["labels"]))
+    return acc, losses, bits, colls, downs
+
+
+def bench(quick: bool = False) -> tuple[list[tuple[str, float, str]], dict]:
+    """Shared benchmarks.run contract: (csv rows, payload)."""
+    steps = 120
+    rows, results = [], []
+    for pt in QUICK_SWEEP if quick else SWEEP:
+        acc, losses, bits, colls, downs = train_federated(pt, steps=steps)
+        results.append(
+            {
+                "name": pt.name,
+                "topology": pt.topology,
+                "participation": pt.participation,
+                "lazy_thresh": pt.lazy_thresh,
+                "max_stale": pt.max_stale,
+                "noniid_alpha": pt.noniid_alpha,
+                "acc": acc,
+                "loss0": losses[0],
+                "lossT": losses[-1],
+                "wire_mb_per_step": float(np.mean(bits)) / 8e6,
+                "down_mb_per_step": float(np.mean(downs)) / 8e6,
+                "collectives_per_step": float(np.mean(colls)),
+            }
+        )
+    eager = results[0]
+    for r in results:
+        r["wire_ratio"] = r["wire_mb_per_step"] / eager["wire_mb_per_step"]
+        rows.append(
+            (
+                f"federated/{r['name']}",
+                r["collectives_per_step"],
+                f"wire_ratio={r['wire_ratio']:.2f} "
+                f"part={r['participation']:.2f} "
+                f"alpha={r['noniid_alpha']:g} acc={r['acc']:.3f}",
+            )
+        )
+    gate_row = next(r for r in results if r["name"] == GATE_ROW)
+    passed = (
+        gate_row["wire_ratio"] <= GATE_RATIO
+        and gate_row["acc"] >= eager["acc"] - ACC_BAND
+    )
+    payload = {
+        "bench": "federated",
+        "schema": 1,
+        "quick": quick,
+        "steps": steps,
+        "model": "mini_cnn",
+        "base": "lq_sgd_r1_b8_fused",
+        "acc_band": ACC_BAND,
+        "gate_ratio": GATE_RATIO,
+        "results": results,
+        "gate": {
+            "passed": passed,
+            "row": GATE_ROW,
+            "wire_ratio": gate_row["wire_ratio"],
+            "acc_drop": eager["acc"] - gate_row["acc"],
+        },
+    }
+    return rows, payload
+
+
+if __name__ == "__main__":
+    for name, val, extra in bench(quick=True)[0]:
+        print(f"{name},{val:.2f},{extra}")

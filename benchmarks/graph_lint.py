@@ -13,6 +13,11 @@ LintReport JSON:
   * ``moe_smoke``    — mixtral-8x7b smoke (MoE routing in the graph);
   * ``ssm_smoke``    — mamba2-370m smoke, lazy 4-bit QSGD (int8-packed
                        wire exercises dtype hygiene on the other codec);
+  * ``server_wire``  — gemma3-1b smoke on the SERVER topology with
+                       drop-out + per-worker laziness: payload
+                       collectives unconditional, one contribution
+                       gather per group, collective-free worker_gate
+                       conds (the inverted containment invariant);
   * ``deepseek_671b``— the FULL deepseek-v3-671b config, jaxpr level
                        (abstract trace: ~10 s, no compile) under the
                        ``REPRO_DRYRUN_DEVICES`` override the dry-run
@@ -61,6 +66,13 @@ MATRIX = [
         "ssm_smoke",
         "repro.analysis.lint",
         "--arch mamba2-370m --smoke --compressor qsgd --bits 4 --lazy-thresh 0.05 --mesh 2x1",
+        {},
+    ),
+    (
+        "server_wire",
+        "repro.analysis.lint",
+        "--arch gemma3-1b --smoke --compressor lq_sgd --lazy-thresh 0.05 "
+        "--wire server --participation 0.5 --mesh 2x1",
         {},
     ),
     (

@@ -11,6 +11,9 @@ Prints ``name,us_per_call,derived`` CSV (scaffold contract):
                      proxy (merged into BENCH_comm_cost.json; carries the
                      CI gate invariant benchmarks/check_regression.py
                      hard-fails on)
+  * federated     -> server-wire federated scenarios: participation x
+                     per-worker staleness x non-IID sweep with its own
+                     wire-ratio CI gate (merged into BENCH_comm_cost.json)
   * convergence   -> paper Figs. 1-3 / accuracy+time columns (reduced scale)
   * gia_ssim      -> paper Fig. 5 (SSIM/PSNR under gradient inversion,
                      cold-start AND steady-state attack points)
@@ -62,9 +65,10 @@ def main() -> None:
                     help="also write each section's BENCH_*.json")
     args = ap.parse_args()
 
-    from benchmarks import (comm_cost, convergence, gia_ssim, graph_lint,
-                            lazy_elision, lazy_sweep, policy_sweep,
-                            quant_kernel, serve_throughput, step_time)
+    from benchmarks import (comm_cost, convergence, federated, gia_ssim,
+                            graph_lint, lazy_elision, lazy_sweep,
+                            policy_sweep, quant_kernel, serve_throughput,
+                            step_time)
 
     # key-merging sections AFTER their owning file's section:
     # policy_sweep/lazy_sweep ride in BENCH_comm_cost.json, lazy_elision
@@ -73,6 +77,7 @@ def main() -> None:
         "comm_cost": comm_cost,
         "policy_sweep": policy_sweep,
         "lazy_sweep": lazy_sweep,
+        "federated": federated,
         "quant_kernel": quant_kernel,
         "step_time": step_time,
         "lazy_elision": lazy_elision,

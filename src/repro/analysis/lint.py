@@ -206,8 +206,18 @@ def main(argv=None):
     ap.add_argument("--warmup", type=int, default=0)
     ap.add_argument("--rank", type=int, default=1)
     ap.add_argument("--bits", type=int, default=8)
-    ap.add_argument("--wire", default="allgather_codes",
+    ap.add_argument("--wire-mode", default="allgather_codes",
                     choices=["allgather_codes", "psum_sim"])
+    ap.add_argument("--wire", default="symmetric",
+                    choices=["symmetric", "server"],
+                    help="wire topology: peer all-reduce vs parameter "
+                         "server with per-worker laziness")
+    ap.add_argument("--participation", type=float, default=1.0,
+                    help="server wire: per-round worker participation "
+                         "probability (straggler drop-out)")
+    ap.add_argument("--agg", default="participation",
+                    choices=["participation", "sparsity"])
+    ap.add_argument("--participation-seed", type=int, default=0)
     ap.add_argument("--avg-mode", default="paper",
                     choices=["paper", "dequant_then_mean"])
     ap.add_argument("--fuse", action="store_true")
@@ -254,7 +264,11 @@ def main(argv=None):
         name=args.compressor,
         rank=args.rank,
         bits=args.bits,
-        wire=args.wire,
+        wire=args.wire_mode,
+        topology=args.wire,
+        participation=args.participation,
+        agg=args.agg,
+        participation_seed=args.participation_seed,
         avg_mode=args.avg_mode,
         fuse_collectives=args.fuse,
         policy=args.policy,

@@ -13,7 +13,12 @@ The rule catalog (ids are stable — tests and CI grep for them):
     Every payload collective of a lazy group sits inside its ``lax.cond``
     fire branch; the skip branch launches none; exactly one unconditional
     decision psum per group. Checked structurally at the jaxpr level and
-    against the compiled conditionals at the HLO level.
+    against the compiled conditionals at the HLO level. Under the server
+    topology the invariant INVERTS: payload collectives must run
+    unconditionally (a per-worker predicate gating a collective would
+    deadlock the mesh), the decision is one unconditional ``all_gather``
+    of contribution flags, and every ``worker_gate`` conditional must be
+    collective-free in all branches.
 ``accounting-parity``
     The inventory's summed operand bits equal the compressors' static
     physical accounting per method group (``physical_bits_by_method``),
@@ -27,7 +32,10 @@ The rule catalog (ids are stable — tests and CI grep for them):
     EMA state specs replicate (``launch/sharding.py:assert_replicated``),
     and the compiled conditional's predicate backward-slices to an
     all-reduce or a parameter with no ``partition-id`` / ``replica-id`` /
-    rng taint.
+    rng taint. Conditionals whose branches launch no collectives are
+    exempt — a divergent branch choice cannot deadlock anything, and the
+    server wire's per-worker fire/skip gates are exactly this shape
+    (their predicates fold in ``axis_index`` by design).
 ``donation-aliasing``
     A step compiled with donated state actually aliases buffers
     (``input_output_alias`` in the module header) — no silent copies.
@@ -187,12 +195,85 @@ def _containers(method: str, pl: Any) -> set[str]:
 # ------------------------------------------------------------------ rules
 
 
+def _server_containment(ctx: LintContext, lazy: dict) -> RuleResult:
+    """Server-topology variant of elision-containment: the containment
+    invariant inverts. Workers decide fire/skip independently, so NO
+    collective may sit under a conditional (a per-worker predicate gating
+    a collective deadlocks the mesh); elision happens in VALUE space —
+    the ``worker_gate`` cond substitutes a stale payload, and only the
+    accounting drops the bytes. What we check instead: payload
+    collectives unconditional, exactly one unconditional contribution
+    all_gather per group, worker_gate branches collective-free."""
+    rid = "elision-containment"
+    findings: list[Finding] = []
+    levels: list[str] = []
+    if ctx.jaxpr_rows is not None:
+        levels.append("jaxpr")
+        for m in lazy:
+            tag = f"comp.{m}.lazy"
+            loc = f"lazy group {m!r} (server)"
+            decision = [r for r in ctx.jaxpr_rows
+                        if r.tagged(tag) and r.tagged("lazy.decision")
+                        and not r.chained]
+            if (len(decision) != 1 or decision[0].kind != "all_gather"
+                    or decision[0].cond is not None):
+                findings.append(Finding(
+                    rid, loc,
+                    f"expected exactly one unconditional contribution "
+                    f"all_gather, found "
+                    f"{[(r.kind, r.cond) for r in decision]}"))
+            for r in ctx.jaxpr_rows:
+                if (r.tagged(f"comp.{m}.") and not r.chained
+                        and r.cond is not None):
+                    findings.append(Finding(
+                        rid, loc,
+                        f"{r.kind} ({r.dtype}{list(r.shape)}) sits inside "
+                        f"a conditional — a per-worker predicate gating a "
+                        f"collective would deadlock the mesh"))
+            gates = [c for c in (ctx.jaxpr_conds or [])
+                     if f"comp.{m}.worker_gate" in c.tag]
+            if not gates:
+                findings.append(Finding(
+                    rid, loc,
+                    "no worker_gate cond found — stale substitution is "
+                    "not dispatched per worker"))
+            for c in gates:
+                for bi, branch in enumerate(c.branches):
+                    for r in branch:
+                        findings.append(Finding(
+                            rid, loc,
+                            f"worker_gate branch {bi} launches a {r.kind} "
+                            f"— must be collective-free"))
+    if ctx.hlo_rows is not None:
+        levels.append("hlo")
+        for c in ctx.hlo_conds or []:
+            for bi, branch in enumerate(c.branches):
+                for r in branch:
+                    findings.append(Finding(
+                        rid, f"hlo conditional {c.name}",
+                        f"branch {bi} launches {r.kind} ({r.name}) — no "
+                        f"compiled conditional may carry collectives "
+                        f"under the server wire"))
+        decision = [r for r in ctx.hlo_rows if r.tagged("lazy.decision")]
+        if not decision:
+            findings.append(Finding(
+                rid, "hlo", "no compiled contribution gather found"))
+    if not levels:
+        return RuleResult(rid, "-", "skipped", [],
+                          note="no jaxpr or HLO artifact provided")
+    status = "fail" if findings else "pass"
+    return RuleResult(rid, "+".join(levels), status, findings,
+                      note="server topology: value-space elision")
+
+
 def rule_elision_containment(ctx: LintContext) -> RuleResult:
     rid = "elision-containment"
     lazy = _lazy_groups(ctx.compressor)
     if not lazy:
         return RuleResult(rid, "jaxpr", "pass", [],
                           note="no lazy groups — nothing to contain")
+    if getattr(ctx.cfg, "topology", "symmetric") == "server":
+        return _server_containment(ctx, lazy)
     findings: list[Finding] = []
     levels: list[str] = []
     if ctx.jaxpr_rows is not None:
@@ -300,16 +381,25 @@ def rule_accounting_parity(ctx: LintContext) -> RuleResult:
         if sem != exp:
             notes.append(f"{m}: physical {exp} vs semantic wire {sem} "
                          f"(known simulation gap)")
+    server = getattr(ctx.cfg, "topology", "symmetric") == "server"
     for m, lz in _lazy_groups(comp).items():
-        want = (lazy_mod.DECISION_BITS_PER_LEAF * len(lz)
-                + lazy_mod.DECISION_BITS_PER_GROUP)
+        if server:
+            # per-worker decisions are local; the wire carries one f32
+            # contribution flag per worker (first gather hop only)
+            want = lazy_mod.SERVER_DECISION_BITS_PER_GROUP
+            label = "flag/worker"
+        else:
+            want = (lazy_mod.DECISION_BITS_PER_LEAF * len(lz)
+                    + lazy_mod.DECISION_BITS_PER_GROUP)
+            label = "64/leaf + 32/group"
         got = sum(r.bits for r in ctx.jaxpr_rows
-                  if r.tagged(f"comp.{m}.lazy") and r.tagged("lazy.decision"))
+                  if r.tagged(f"comp.{m}.lazy") and r.tagged("lazy.decision")
+                  and not r.chained)
         if got != want:
             findings.append(Finding(
                 rid, f"lazy group {m!r}",
-                f"decision psum carries {got} bits, accounting says "
-                f"{want} (64/leaf + 32/group)"))
+                f"decision sideband carries {got} bits, accounting says "
+                f"{want} ({label})"))
     warm = _warmup_steps(comp)
     shadow = sum(r.bits for r in ctx.jaxpr_rows
                  if r.tagged("comp.warmup_shadow"))
@@ -396,7 +486,15 @@ def rule_predicate_uniformity(ctx: LintContext) -> RuleResult:
                                         str(e)))
     if ctx.hlo_module is not None:
         levels.append("hlo")
-        for cond in ctx.hlo_module.conditionals():
+        sites = ctx.hlo_conds or []
+        for ci, cond in enumerate(ctx.hlo_module.conditionals()):
+            # collective-free conditionals are exempt: a divergent branch
+            # choice cannot deadlock anything. The server wire's
+            # worker_gate conds are exactly this shape — their predicates
+            # fold in axis_index/rng by design and MUST stay non-uniform.
+            site = sites[ci] if ci < len(sites) else None
+            if site is not None and not any(site.branches):
+                continue
             findings.extend(_slice_predicate(ctx, cond))
     if not levels:
         return RuleResult(rid, "-", "skipped", [],
@@ -464,8 +562,11 @@ def rule_wire_dtype_hygiene(ctx: LintContext) -> RuleResult:
         allowed: set[str] = set()
         for pl in plans:
             allowed |= _containers(m, pl)
+        # decision sideband is exempt: the server wire's contribution
+        # flags ride an f32 all_gather by contract, not a codec container
         gathers = [r for r in _payload_rows(ctx.jaxpr_rows, m)
-                   if r.kind == "all_gather"]
+                   if r.kind == "all_gather"
+                   and not r.tagged("lazy.decision")]
         for r in gathers:
             if r.dtype not in allowed:
                 findings.append(Finding(

@@ -29,6 +29,7 @@ from repro.core.policy import (
 )
 from repro.core.powersgd import PowerSGDCompressor
 from repro.core.quantization import LogQuantConfig
+from repro.core.wire import ServerWire, SymmetricWire, as_wire
 
 __all__ = [
     "AxisComm",
@@ -58,4 +59,7 @@ __all__ = [
     "plan_auto",
     "resolve_policies",
     "uniform_policy",
+    "ServerWire",
+    "SymmetricWire",
+    "as_wire",
 ]

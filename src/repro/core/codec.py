@@ -35,6 +35,7 @@ import jax.numpy as jnp
 
 from repro.core.comm import AxisComm, CommRecord
 from repro.core.quantization import LogQuantConfig, log_expand, quantize
+from repro.core.wire import SymmetricWire, as_wire
 
 __all__ = [
     "WireCodec",
@@ -285,7 +286,8 @@ def _local_absmax(x: jax.Array, stacked: bool) -> jax.Array:
 
 
 def codec_phase(xs: Sequence[jax.Array], stacked_flags: Sequence[bool],
-                codec: WireCodec, comm: AxisComm, rec: CommRecord, *,
+                codec: WireCodec, comm: AxisComm | SymmetricWire,
+                rec: CommRecord, *,
                 avg_mode: str = "paper", wire: str = "allgather_codes",
                 fuse: bool = False, keys: Sequence[jax.Array | None] | None = None,
                 account_bits: Sequence[int] | None = None) -> list[jax.Array]:
@@ -320,6 +322,10 @@ def codec_phase(xs: Sequence[jax.Array], stacked_flags: Sequence[bool],
         return []
     keys = list(keys) if keys is not None else [None] * n
     xs = [x.astype(jnp.float32) for x in xs]
+    # aggregation is the wire topology's call (plain mean on the symmetric
+    # wire, participation/sparsity-weighted on the server wire); a bare
+    # AxisComm lands on the symmetric path unchanged
+    wt = as_wire(comm)
 
     # ---- shared quantization grid: per-instance global max ---------------
     if codec.needs_scale:
@@ -355,9 +361,9 @@ def codec_phase(xs: Sequence[jax.Array], stacked_flags: Sequence[bool],
                        else codec.wire_bits(x.size))
             rec.add(payload + codec.scale_bits(ns), 1)
             if avg_mode == "paper":
-                val = codec.expand(comm.pmean(c.astype(jnp.float32)))
+                val = codec.expand(wt.pmean(c.astype(jnp.float32)))
             else:
-                val = comm.pmean(codec.expand(c.astype(jnp.float32)))
+                val = wt.pmean(codec.expand(c.astype(jnp.float32)))
             outs.append(_rescale(val, safe))
         return outs
     if wire != "allgather_codes":
@@ -380,8 +386,8 @@ def codec_phase(xs: Sequence[jax.Array], stacked_flags: Sequence[bool],
     for g, x, safe in zip(gathered, xs, safes):
         codes = codec.decode(g, x.size).reshape((g.shape[0],) + x.shape)
         if avg_mode == "paper":
-            val = codec.expand(jnp.mean(codes, axis=0))
+            val = codec.expand(wt.average(codes))
         else:
-            val = jnp.mean(codec.expand(codes), axis=0)
+            val = wt.average(codec.expand(codes))
         outs.append(_rescale(val, safe))
     return outs

@@ -67,6 +67,7 @@ class CommRecord:
     n_collectives: int = 0
     dyn_bits: object = 0          # gate-weighted payload (jnp scalar or 0)
     dyn_collectives: object = 0
+    down_bits: int = 0  # server->worker broadcast payload (server wire)
 
     def add(self, bits: int, n: int = 1) -> None:
         self.bits_sent += int(bits)
@@ -77,6 +78,13 @@ class CommRecord:
         g = jnp.asarray(gate, jnp.float32)
         self.dyn_bits = self.dyn_bits + g * bits
         self.dyn_collectives = self.dyn_collectives + g * n
+
+    def add_down(self, bits: int) -> None:
+        """Charge downlink bytes (the server's aggregate broadcast). Pure
+        bookkeeping for the asymmetric wire — the symmetric all-reduce
+        has no server, so ``effective_bits`` (uplink) stays the headline
+        and this tier stays static and separate."""
+        self.down_bits += int(bits)
 
     def effective_bits(self):
         """Static + gate-weighted payload bits (int, or jnp scalar when a
@@ -94,14 +102,19 @@ class AxisComm:
         if isinstance(axis_names, str):
             axis_names = (axis_names,)
         self.axis_names = tuple(axis_names)
+        self._size: int | None = None
 
     def size(self) -> int:
-        n = 1
-        for a in self.axis_names:
-            # psum of a unit weak-typed scalar: the canonical axis-size
-            # query that works under both shard_map and vmap tracing
-            n *= int(jax.lax.psum(1, a))
-        return n
+        # accounting paths query this once per sync — cache per instance
+        # (the axis sizes are fixed for the life of the trace context)
+        if self._size is None:
+            n = 1
+            for a in self.axis_names:
+                # psum of a unit weak-typed scalar: the canonical axis-size
+                # query that works under both shard_map and vmap tracing
+                n *= int(jax.lax.psum(1, a))
+            self._size = n
+        return self._size
 
     def psum(self, x: jax.Array) -> jax.Array:
         return jax.lax.psum(x, self.axis_names)
@@ -144,10 +157,20 @@ class AxisComm:
 
     def fused_pmax(self, xs: list[jax.Array]) -> list[jax.Array]:
         """ONE pmax over every (small) tensor in ``xs``; shapes preserved.
-        Used to fuse the per-tensor quantization-scale reductions."""
+        Used to fuse the per-tensor quantization-scale reductions.
+
+        Contract: every input must already be float32 — the fused buffer
+        is a single f32 concatenate, and a silent upcast here would make
+        the traced collective wider than the accounted one (the same
+        reason ``fused_all_gather`` rejects mixed dtypes).
+        """
         if not xs:
             return []
-        flat = jnp.concatenate([x.reshape(-1).astype(jnp.float32) for x in xs])
+        bad = [str(x.dtype) for x in xs if x.dtype != jnp.float32]
+        if bad:
+            raise ValueError("fused_pmax requires float32 inputs (scale "
+                             f"reductions are f32 by contract); got {bad}")
+        flat = jnp.concatenate([x.reshape(-1) for x in xs])
         m = self.pmax(flat)
         outs, off = [], 0
         for x in xs:

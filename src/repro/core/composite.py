@@ -51,6 +51,25 @@ program, not just discarded; ``"gate"`` keeps the legacy trace-always,
 (fused) phase set every step. ``lazy_thresh = 0`` builds none of the
 machinery — the composite is bit-for-bit the eager one
 (regression-tested, all four methods, fused and unfused).
+
+Server topology (:mod:`repro.core.wire`, ``cfg.topology='server'``): the
+group-consensus skip above is the symmetric wire's necessity — every peer
+must agree before eliding a collective. A parameter-server round has no
+such constraint: each worker tests its OWN innovation
+(:func:`repro.core.lazy.worker_decision`) and decides alone whether to
+upload, exactly LAQ's original setting. ``_sync_lazy_group_server``
+substitutes a non-contributing worker's input with its cached reference
+(what the server already holds for it) under a collective-free per-worker
+``lax.cond``, runs the handler's collectives UNCONDITIONALLY on the
+substituted inputs (the gather is the server round-trip; only its CONTENT
+is per-worker conditional), and gathers a one-flag contribution mask so
+byte accounting and the server's weighted average know who shipped fresh
+payload. Per-worker state (``err``, ``lazy_ref``, ``lazy_stale``)
+freezes for workers that sat out; collective-derived state (warm Q, the
+drift EMA) is worker-identical and advances every round. There is no
+``lazy_out`` cache and no group skip: the server re-aggregates every
+round, so only wire BYTES drop (by the contribution rate), never the
+collective count.
 """
 from __future__ import annotations
 
@@ -179,13 +198,19 @@ class CompositeCompressor(GradCompressor):
                 for ns, v in h.init_leaf_state(key, i, self.plans[i]).items():
                     state[ns][str(i)] = v
         # ---- lazy-aggregation state (repro.core.lazy) --------------------
+        # server topology has no group skip, hence no cached-aggregate
+        # namespace: the server re-aggregates every round, and a stale
+        # worker's cache is its reference (lazy_ref), not an output
         sd = jnp.dtype(self.cfg.state_dtype)
+        server = self.cfg.topology == "server"
         for m, lz in self.lazy_groups.items():
-            for ns in (lazy_mod.OUT_NS, lazy_mod.REF_NS, lazy_mod.STALE_NS):
+            for ns in ((lazy_mod.REF_NS, lazy_mod.STALE_NS) if server else
+                       (lazy_mod.OUT_NS, lazy_mod.REF_NS, lazy_mod.STALE_NS)):
                 state.setdefault(ns, {})
             for i in lz:
                 shape = self.plans[i].shape
-                state[lazy_mod.OUT_NS][str(i)] = jnp.zeros(shape, sd)
+                if not server:
+                    state[lazy_mod.OUT_NS][str(i)] = jnp.zeros(shape, sd)
                 state[lazy_mod.REF_NS][str(i)] = jnp.zeros(shape, sd)
             # the counter starts AT the cap: round 0 always fires, so the
             # cached aggregate is never consumed before it exists
@@ -223,6 +248,12 @@ class CompositeCompressor(GradCompressor):
     def sync(self, grads: PyTree, state: PyTree, comm: AxisComm
              ) -> tuple[PyTree, PyTree, CommRecord]:
         rec = CommRecord()
+        wire = self._make_wire(comm, state)
+        # participation sideband gathers (and charges) OUTSIDE the
+        # per-method scopes so the analysis accounting-parity buckets
+        # stay exact per method
+        wire.prepare(rec)
+        server = wire.kind == "server"
         leaves = jax.tree_util.tree_flatten(grads)[0]
         outs: dict[int, jax.Array] = {}
         updates: dict[str, dict] = {}
@@ -237,16 +268,17 @@ class CompositeCompressor(GradCompressor):
             if eager:
                 items = [(i, leaves[i], self.plans[i]) for i in eager]
                 with jax.named_scope(f"comp.{m}.eager"):
-                    o, upd = self.handlers[m].sync_group(items, state, comm,
+                    o, upd = self.handlers[m].sync_group(items, state, wire,
                                                          rec)
                 outs.update(o)
                 for ns, sub in upd.items():
                     updates.setdefault(ns, {}).update(sub)
             if lz:
                 with jax.named_scope(f"comp.{m}.lazy"):
-                    o, upd = self._sync_lazy_group(
-                        m, self.lazy_groups[m], leaves, state, comm, rec,
-                        warm)
+                    sync_lazy = (self._sync_lazy_group_server if server
+                                 else self._sync_lazy_group)
+                    o, upd = sync_lazy(m, self.lazy_groups[m], leaves,
+                                       state, wire, rec, warm)
                 outs.update(o)
                 for ns, sub in upd.items():
                     updates.setdefault(ns, {}).update(sub)
@@ -257,13 +289,15 @@ class CompositeCompressor(GradCompressor):
                     if not self._lossy(pl):
                         continue
                     g = leaves[i]
-                    exact = comm.pmean(g.astype(jnp.float32)).astype(g.dtype)
+                    exact = wire.pmean(g.astype(jnp.float32)).astype(g.dtype)
                     outs[i] = jnp.where(warm, exact, outs[i])
                 # hold error feedback at zero while warm: the compressed
                 # path's residual was never applied, so recycling it would
                 # inject a phantom correction at step W
                 for k, v in updates.get("err", {}).items():
                     updates["err"][k] = jnp.where(warm, jnp.zeros_like(v), v)
+        updates = self._freeze_inactive(updates, state, wire)
+        self._charge_downlink(rec, wire)
         new_state = dict(self._merge_state(state, updates))
         new_state["step"] = state["step"] + 1
         out = [outs[i] for i in range(len(leaves))]
@@ -271,7 +305,7 @@ class CompositeCompressor(GradCompressor):
                 new_state, rec)
 
     def _sync_lazy_group(self, m: str, idxs: list[int], leaves, state,
-                         comm: AxisComm, rec: CommRecord, warm
+                         comm, rec: CommRecord, warm
                          ) -> tuple[dict[int, jax.Array], dict]:
         """One method group's lazy subset: collective skip decision, the
         handler sync dispatched on it, cached-aggregate selection (module
@@ -399,13 +433,125 @@ class CompositeCompressor(GradCompressor):
                 state[lazy_mod.EMA_NS][m], drift, dec.fire)}
         return outs, upd
 
+    def _sync_lazy_group_server(self, m: str, idxs: list[int], leaves,
+                                state, wire, rec: CommRecord, warm
+                                ) -> tuple[dict[int, jax.Array], dict]:
+        """One method group's lazy subset on the SERVER wire: per-worker
+        fire/skip (LAQ's original asymmetric setting — module docstring).
+
+        Each worker runs :func:`repro.core.lazy.worker_decision` on its
+        OWN innovation — no consensus psum; the predicate may (and should)
+        differ across workers. A worker *contributes* when it fires AND
+        its participation draw came up (``wire.active()``); otherwise its
+        handler input is substituted with the cached reference the server
+        already holds for it, under a per-worker ``lax.cond`` whose
+        branches are collective-free — which is exactly what makes the
+        non-uniform predicate safe. For error-feedback leaves the
+        substitution feeds ``ref - err`` so the handler's internal
+        ``g + err`` reconstructs ``ref`` exactly (feeding ``ref`` itself
+        would double-add the residual).
+
+        The handler's collectives then run UNCONDITIONALLY on the
+        substituted inputs — the gather is the server round-trip and
+        happens every round; only each worker's payload CONTENT is
+        conditional. A one-f32-flag contribution-mask gather (tagged
+        ``lazy.decision``, :data:`repro.core.lazy.
+        SERVER_DECISION_BITS_PER_GROUP`) tells the round's fresh-upload
+        fraction ``p_round``, which gates the BYTE accounting: per-worker
+        average uplink is ``p_round * payload`` while the collective
+        count stays static. Per-worker state (``err``, ``lazy_ref``,
+        ``lazy_stale``) freezes unless the worker contributed;
+        collective-derived state (warm Q — PowerSGD's P-phase linearity
+        REQUIRES a shared Q — and the drift EMA, refreshed by every
+        round's aggregate) advances worker-identically every round.
+        Note ``lazy_stale`` resets on CONTRIBUTION, not on fire: a
+        dropped-out worker's forced fire never reached the server, so its
+        cache really is one round staler.
+        """
+        sd = jnp.dtype(self.cfg.state_dtype)
+        f32 = jnp.float32
+        h = self.handlers[m]
+        xs, fresh, subs = [], [], []
+        for i in idxs:
+            g = leaves[i]
+            x = g.astype(f32)
+            sub = state[lazy_mod.REF_NS][str(i)].astype(f32)
+            if self._has_err(i, state):
+                e = state["err"][str(i)].astype(f32)
+                x = x + e
+                sub = sub - e
+            xs.append(x)
+            fresh.append(g.astype(f32))
+            subs.append(sub)
+        a_cap = lazy_mod.group_adaptive_cap(self.plans, idxs)
+        dec = lazy_mod.worker_decision(
+            xs, [state[lazy_mod.REF_NS][str(i)] for i in idxs],
+            [self.plans[i].policy.lazy_thresh for i in idxs],
+            state[lazy_mod.STALE_NS][m],
+            lazy_mod.group_max_stale(self.plans, idxs),
+            force=warm,
+            tau_scale2=(lazy_mod.tau_scale2(state[lazy_mod.EMA_NS][m], a_cap)
+                        if a_cap > 0 else None))
+        contrib = dec.fire & wire.active()
+        # the server must learn who shipped fresh payload: one f32 flag
+        # per worker per group (the whole decision sideband in server
+        # mode — the innovation test itself was local and free)
+        with jax.named_scope("lazy.decision"):
+            flags = wire.all_gather(contrib.astype(f32))
+        rec.add(lazy_mod.SERVER_DECISION_BITS_PER_GROUP, 1)
+        p_round = jnp.mean(flags)
+        with jax.named_scope(f"comp.{m}.worker_gate"):
+            g_effs = jax.lax.cond(contrib, lambda: fresh, lambda: subs)
+        items = [(i, ge, self.plans[i]) for i, ge in zip(idxs, g_effs)]
+        sub_rec = CommRecord()
+        o, upd = h.sync_group(items, state, wire, sub_rec)
+        rec.add(0, sub_rec.n_collectives)
+        rec.add_gated(sub_rec.bits_sent, 0, p_round)
+        # per-worker namespaces freeze for non-contributors; everything
+        # else (warm Q) is collective-derived and worker-identical
+        for ns, subd in upd.items():
+            if ns not in h.param_shaped:
+                continue
+            for k in list(subd):
+                old = state.get(ns, {}).get(k)
+                if old is not None:
+                    subd[k] = jnp.where(contrib, subd[k],
+                                        old.astype(subd[k].dtype))
+        outs: dict[int, jax.Array] = {}
+        new_ref = {}
+        for i, x in zip(idxs, xs):
+            k = str(i)
+            outs[i] = o[i].astype(leaves[i].dtype)
+            new_ref[k] = jnp.where(
+                contrib, x,
+                state[lazy_mod.REF_NS][k].astype(f32)).astype(sd)
+        upd[lazy_mod.REF_NS] = new_ref
+        upd[lazy_mod.STALE_NS] = {m: jnp.where(
+            contrib, jnp.zeros_like(dec.stale), dec.stale + 1)}
+        if a_cap > 0:
+            # the aggregate refreshes every server round, so the drift
+            # tracker advances every round too
+            drift = sum(jnp.sum(jnp.square(o[i].astype(f32))) for i in idxs)
+            upd[lazy_mod.EMA_NS] = {m: lazy_mod.ema_update(
+                state[lazy_mod.EMA_NS][m], drift, jnp.bool_(True))}
+        return outs, upd
+
     # ---- static accounting -----------------------------------------------
+    def _group_decision_bits(self, lz: list[int]) -> int:
+        """One lazy group's decision sideband. Symmetric: the fused
+        innovation psum (64/leaf + a force slot). Server: the local test
+        is free; only the one-flag contribution-mask gather ships."""
+        if self.cfg.topology == "server":
+            return lazy_mod.SERVER_DECISION_BITS_PER_GROUP
+        return (lazy_mod.DECISION_BITS_PER_LEAF * len(lz)
+                + lazy_mod.DECISION_BITS_PER_GROUP)
+
     def decision_bits_per_step(self) -> int:
         """Skip-decision sideband (fires every round): one fused psum of
         innovation + norm scalars per lazy group, plus the group's
-        force-vote slot (what makes the predicate worker-uniform)."""
-        return sum(lazy_mod.DECISION_BITS_PER_LEAF * len(lz)
-                   + lazy_mod.DECISION_BITS_PER_GROUP
+        force-vote slot (what makes the predicate worker-uniform) — or,
+        on the server wire, one contribution flag per group."""
+        return sum(self._group_decision_bits(lz)
                    for lz in self.lazy_groups.values())
 
     def wire_bits_per_step(self) -> int:
@@ -431,13 +577,22 @@ class CompositeCompressor(GradCompressor):
                                     ) -> float:
         """Planner-model expectation: eager leaves at full weight, each
         lazy subset at its ``p_fire``, plus the always-on decision
-        sideband."""
+        sideband. On the server wire every payload is further scaled by
+        the participation rate (an absent worker's upload is the server's
+        cache, not wire traffic) and the per-round flag gather rides on
+        top — fire and participation draws are independent, so the
+        per-worker upload probability is their product."""
+        server = self.cfg.topology == "server"
+        part = self.cfg.participation if server else 1.0
         total = float(self.decision_bits_per_step())
+        if server and part < 1.0:
+            from repro.core.wire import PARTICIPATION_FLAG_BITS
+            total += float(PARTICIPATION_FLAG_BITS)
         for i, pl in enumerate(self.plans):
             m = pl.policy.method
             p = (self.group_p_fire(m, innovation_rate)
                  if i in self.lazy_groups.get(m, ()) else 1.0)
-            total += p * self.handlers[m].leaf_wire_bits(pl)
+            total += p * part * self.handlers[m].leaf_wire_bits(pl)
         return total
 
     def warmup_extra_bits(self) -> int:
@@ -459,9 +614,7 @@ class CompositeCompressor(GradCompressor):
             m = pl.policy.method
             out[m] = out.get(m, 0) + self.handlers[m].leaf_wire_bits(pl)
         for m, lz in self.lazy_groups.items():
-            out[m] = (out.get(m, 0)
-                      + lazy_mod.DECISION_BITS_PER_LEAF * len(lz)
-                      + lazy_mod.DECISION_BITS_PER_GROUP)
+            out[m] = out.get(m, 0) + self._group_decision_bits(lz)
         return out
 
     def physical_bits_by_method(self) -> dict[str, int]:
@@ -476,9 +629,7 @@ class CompositeCompressor(GradCompressor):
             m = pl.policy.method
             out[m] = out.get(m, 0) + self.handlers[m].leaf_physical_bits(pl)
         for m, lz in self.lazy_groups.items():
-            out[m] = (out.get(m, 0)
-                      + lazy_mod.DECISION_BITS_PER_LEAF * len(lz)
-                      + lazy_mod.DECISION_BITS_PER_GROUP)
+            out[m] = out.get(m, 0) + self._group_decision_bits(lz)
         return out
 
     # ---- decay phases ----------------------------------------------------

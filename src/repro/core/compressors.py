@@ -125,6 +125,22 @@ class CompressorConfig:
     # parameter-drift EMA (tau_eff^2 <= lazy_adaptive * tau^2); 0 = fixed
     # thresholds
     lazy_adaptive: float = 0.0
+    # ---- wire topology (repro.core.wire) ---------------------------------
+    # 'symmetric': all-reduce among peers (bit-for-bit the historical
+    # path); 'server': parameter-server round — per-worker participation
+    # draw, masked gather, weighted server-side aggregation, per-worker
+    # lazy decisions (the group-consensus psum is replaced by local tests)
+    topology: str = "symmetric"
+    # server wire: each worker's independent per-round upload probability
+    # (1.0 = full participation, the eager-equivalent case); < 1 routes
+    # through the CompositeCompressor (per-worker state freezing + the
+    # step counter the participation draw folds in)
+    participation: float = 1.0
+    # server aggregation weighting: 'participation' (divide by the number
+    # of participants) or 'sparsity' (FedDropoutAvg per-element nonzero
+    # mask — sparse TopK uploads don't dilute each other)
+    agg: str = "participation"
+    participation_seed: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -493,16 +509,61 @@ class GradCompressor:
             new[ns] = cur
         return new
 
+    # ---- the wire --------------------------------------------------------
+    def _make_wire(self, comm: AxisComm, state: PyTree):
+        """The configured wire over ``comm`` (bare AxisComm callers land on
+        the symmetric path; an already-wrapped wire passes through). The
+        server wire folds the state's step counter into its participation
+        draw so the drop-out pattern varies over the run."""
+        from repro.core.wire import as_wire
+        step = state.get("step") if isinstance(state, dict) else None
+        return as_wire(comm, topology=self.cfg.topology,
+                       participation=self.cfg.participation,
+                       agg=self.cfg.agg, seed=self.cfg.participation_seed,
+                       step=step)
+
+    def _freeze_inactive(self, updates: dict, state: PyTree, wire) -> dict:
+        """Server wire with drop-out: a worker that sat the round out never
+        uploaded, so its per-worker error feedback must not advance.
+        Collective-derived state (warm Q, PRNG counters) is worker-
+        identical and advances for everyone."""
+        if (wire.kind != "server"
+                or getattr(wire, "participation", 1.0) >= 1.0):
+            return updates
+        act = wire.active()
+        for ns in self._param_shaped_namespaces():
+            sub = updates.get(ns)
+            if not sub:
+                continue
+            for k, v in sub.items():
+                old = state.get(ns, {}).get(k)
+                if old is not None:
+                    sub[k] = jnp.where(act, v, old.astype(v.dtype))
+        return updates
+
+    def _charge_downlink(self, rec: CommRecord, wire) -> None:
+        """Server rounds end with the server broadcasting the dequantized
+        fp32 aggregate — downlink bookkeeping, separate from the uplink
+        headline (the symmetric all-reduce has no broadcast leg)."""
+        if wire.kind == "server":
+            rec.add_down(32 * sum(_numel(pl.shape) for pl in self.plans))
+
     # ---- the sync op -----------------------------------------------------
     def sync(self, grads: PyTree, state: PyTree, comm: AxisComm
              ) -> tuple[PyTree, PyTree, CommRecord]:
         rec = CommRecord()
+        wire = self._make_wire(comm, state)
+        # participation sideband charges OUTSIDE the per-method scopes so
+        # the analysis accounting-parity buckets stay exact per method
+        wire.prepare(rec)
         leaves = jax.tree_util.tree_flatten(grads)[0]
         items = list(zip(range(len(leaves)), leaves, self.plans))
         # same source tag the composite puts on its eager groups, so the
         # graph-lint inventory maps collectives to methods either way
         with jax.named_scope(f"comp.{self.method}.eager"):
-            outs, updates = self.handler.sync_group(items, state, comm, rec)
+            outs, updates = self.handler.sync_group(items, state, wire, rec)
+        updates = self._freeze_inactive(updates, state, wire)
+        self._charge_downlink(rec, wire)
         out = [outs[i] for i in range(len(leaves))]
         return (jax.tree_util.tree_unflatten(self.treedef, out),
                 self._merge_state(state, updates), rec)
@@ -609,8 +670,14 @@ def make_compressor(cfg: CompressorConfig, abstract_grads: PyTree,
     from repro.core.powersgd import PowerSGDCompressor
     from repro.core.lq_sgd import LQSGDCompressor
 
+    if cfg.topology not in ("symmetric", "server"):
+        raise ValueError(f"unknown topology {cfg.topology!r}; options: "
+                         "'symmetric', 'server'")
+    # server drop-out needs the composite: it owns the step counter the
+    # participation draw folds in and the per-worker state freezing
+    server_dropout = cfg.topology == "server" and cfg.participation < 1.0
     if (cfg.policy not in (None, "uniform") or cfg.warmup_steps
-            or cfg.schedule_decay or cfg.lazy_thresh > 0):
+            or cfg.schedule_decay or cfg.lazy_thresh > 0 or server_dropout):
         from repro.core.composite import CompositeCompressor, PolicySchedule
         from repro.core.policy import plan_auto, resolve_policies
         report = None

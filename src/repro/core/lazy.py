@@ -115,6 +115,7 @@ __all__ = [
     "ADAPTIVE_BETA",
     "DECISION_BITS_PER_GROUP",
     "DECISION_BITS_PER_LEAF",
+    "SERVER_DECISION_BITS_PER_GROUP",
     "LazyDecision",
     "ema_update",
     "group_adaptive_cap",
@@ -124,6 +125,7 @@ __all__ = [
     "p_fire",
     "staleness_err",
     "tau_scale2",
+    "worker_decision",
 ]
 
 PyTree = Any
@@ -133,6 +135,10 @@ DECISION_BITS_PER_LEAF = 64
 # one extra fp32 slot per group carrying the force votes (staleness cap +
 # warm-up), so `fire` is a pure function of the psum output
 DECISION_BITS_PER_GROUP = 32
+# server wire: the decision is LOCAL (no innovation psum) — the only
+# sideband is each worker's f32 contribution flag in the per-group mask
+# gather the server needs to know who fired
+SERVER_DECISION_BITS_PER_GROUP = 32
 
 # namespaces the lazy machinery adds to the composite state
 OUT_NS, REF_NS, STALE_NS = "lazy_out", "lazy_ref", "lazy_stale"
@@ -246,6 +252,41 @@ def group_decision(xs: Sequence[jax.Array], refs: Sequence[jax.Array],
         taus = taus * tau_scale2
     votes = stats[:n] > taus * stats[n:2 * n]
     fire = jnp.any(votes) | (stats[2 * n] > 0)
+    new_stale = jnp.where(fire, jnp.zeros_like(stale), stale + 1)
+    return LazyDecision(fire=fire, stale=stale, new_stale=new_stale)
+
+
+def worker_decision(xs: Sequence[jax.Array], refs: Sequence[jax.Array],
+                    threshs: Sequence[float], stale: jax.Array,
+                    max_stale: int, *, force: jax.Array | None = None,
+                    tau_scale2: jax.Array | None = None) -> LazyDecision:
+    """The PER-WORKER skip test for one leaf group on the server wire —
+    LAQ's original setting: each worker compares its own innovation to its
+    own norm and decides alone whether to upload this round.
+
+    Same vote math as :func:`group_decision` but over LOCAL statistics
+    with NO collective: ``fire`` may differ across workers (that is the
+    point), and ``stale`` is this worker's own consecutive-skip counter
+    (per-worker-valued state in server mode). The composite gathers the
+    resulting contribution mask — one f32 flag per worker per group
+    (:data:`SERVER_DECISION_BITS_PER_GROUP`), charged at the call site —
+    so the server-side weighted average knows who is fresh.
+
+    Because neither outcome of this decision launches a collective (the
+    payload gather runs unconditionally on substituted inputs; only the
+    CONTENT each worker feeds it is conditional), a non-uniform predicate
+    is safe here — unlike the symmetric wire's group dispatch.
+    """
+    innov = jnp.stack([jnp.sum(jnp.square(x - r.astype(jnp.float32)))
+                       for x, r in zip(xs, refs)])
+    norms = jnp.stack([jnp.sum(jnp.square(x)) for x in xs])
+    taus = jnp.asarray([t * t for t in threshs], jnp.float32)
+    if tau_scale2 is not None:
+        taus = taus * tau_scale2
+    forced = stale >= max_stale
+    if force is not None:
+        forced = forced | force
+    fire = jnp.any(innov > taus * norms) | forced
     new_stale = jnp.where(fire, jnp.zeros_like(stale), stale + 1)
     return LazyDecision(fire=fire, stale=stale, new_stale=new_stale)
 

@@ -192,20 +192,31 @@ class CostModel:
     def cost_s(self, wire_bits: float, flops: float) -> float:
         return self.wire_s(wire_bits) + self.flops_s(flops)
 
-    def expected_wire_bits(self, pol: LeafPolicy, wire_bits: int) -> float:
+    def expected_wire_bits(self, pol: LeafPolicy, wire_bits: int, *,
+                           topology: str = "symmetric",
+                           participation: float = 1.0) -> float:
         """p_fire-weighted wire of one leaf: the wire only carries the
         payload on a fired round, plus 64 bits/round of decision sideband.
         An adaptive policy (``lazy_adaptive`` cap > 1) is costed at its
         mid-run effective threshold ``tau * sqrt((1 + cap) / 2)`` — the
-        drift EMA ramps the scale from 1 toward the cap over the run."""
+        drift EMA ramps the scale from 1 toward the cap over the run.
+
+        On the server wire every upload is further scaled by the
+        ``participation`` rate (fire and drop-out draws are independent)
+        and the per-leaf sideband vanishes: the worker's innovation test
+        is local, so the only decision traffic is the per-GROUP
+        contribution flag the composite accounts separately."""
         from repro.core.lazy import DECISION_BITS_PER_LEAF, p_fire
+        server = topology == "server"
+        part = participation if server else 1.0
         if pol.lazy_thresh <= 0:
-            return float(wire_bits)
+            return part * float(wire_bits)
         t = pol.lazy_thresh
         if pol.lazy_adaptive > 1:
             t = t * ((1.0 + pol.lazy_adaptive) / 2.0) ** 0.5
         p = p_fire(t, pol.max_stale, self.innovation_rate)
-        return p * wire_bits + DECISION_BITS_PER_LEAF
+        side = 0.0 if server else float(DECISION_BITS_PER_LEAF)
+        return p * part * wire_bits + side
 
 
 def _spectral_mass(k: int) -> float:
@@ -321,7 +332,8 @@ def plan_auto(abstract_grads: PyTree, stacked: PyTree | None = None, *,
     """
     from repro.core.composite import handler_for
     from repro.core.lazy import (DECISION_BITS_PER_GROUP,
-                                 DECISION_BITS_PER_LEAF, p_fire)
+                                 DECISION_BITS_PER_LEAF,
+                                 SERVER_DECISION_BITS_PER_GROUP, p_fire)
     cfg = cfg or CompressorConfig()
     budget = cfg.error_budget if error_budget is None else error_budget
     cm = cost_model or CostModel()
@@ -363,12 +375,19 @@ def plan_auto(abstract_grads: PyTree, stacked: PyTree | None = None, *,
                 continue
             fired_bits, pl = wire_bits(pol, path, leaf, st)
             # accounted wire: a fired round + the leaf's share of the lazy
-            # decision sideband (matches CompositeCompressor accounting);
-            # COST uses the p_fire-weighted expectation
+            # decision sideband (matches CompositeCompressor accounting —
+            # zero per leaf on the server wire, where the test is local);
+            # COST uses the p_fire- (and participation-) weighted
+            # expectation
+            server = cfg.topology == "server"
             bits = fired_bits + (DECISION_BITS_PER_LEAF
-                                 if pol.lazy_thresh > 0 else 0)
-            cost = cm.cost_s(cm.expected_wire_bits(pol, fired_bits),
-                             _leaf_flops(pol, pl))
+                                 if pol.lazy_thresh > 0 and not server
+                                 else 0)
+            cost = cm.cost_s(
+                cm.expected_wire_bits(pol, fired_bits,
+                                      topology=cfg.topology,
+                                      participation=cfg.participation),
+                _leaf_flops(pol, pl))
             key = (cost, bits, err)
             if best is None or key < best[0]:
                 best = (key, pol, bits, err)
@@ -390,13 +409,16 @@ def plan_auto(abstract_grads: PyTree, stacked: PyTree | None = None, *,
             "est_cost_us": cost * 1e6, "raw_bits": numel * 32,
         })
     # each lazy method group's decision psum carries one extra force-vote
-    # slot; attach it to the method's first lazy leaf so the report's wire
-    # sum stays equal to the composite's wire_bits_per_step()
+    # slot (server wire: the one-flag contribution-mask gather instead);
+    # attach it to the method's first lazy leaf so the report's wire sum
+    # stays equal to the composite's wire_bits_per_step()
+    group_slot = (SERVER_DECISION_BITS_PER_GROUP
+                  if cfg.topology == "server" else DECISION_BITS_PER_GROUP)
     seen_lazy: set[str] = set()
     for pol, row in zip(policies, report):
         if pol.lazy_thresh > 0 and pol.method not in seen_lazy:
             seen_lazy.add(pol.method)
-            row["wire_bits"] += DECISION_BITS_PER_GROUP
+            row["wire_bits"] += group_slot
     return policies, report
 
 

@@ -1,0 +1,211 @@
+"""Wire topologies: how one compressor sync round moves bytes.
+
+Every handler in :mod:`repro.core.compressors` talks to the network
+through a *wire* object that exposes the :class:`~repro.core.comm.AxisComm`
+surface (``pmax`` scale phase, ``fused_all_gather`` payload phase, ...)
+plus the one decision the topology owns: how gathered per-worker payloads
+are **aggregated**.
+
+* :class:`SymmetricWire` — the historical all-reduce-among-peers path.
+  ``average`` is the plain mean over the worker axis; bit-for-bit the
+  behavior the repo had before the wire abstraction existed.
+
+* :class:`ServerWire` — a parameter-server round, simulated on the same
+  collectives (the gather stands in for worker->server uploads; the
+  dequantized aggregate every worker computes stands in for the server
+  broadcast, charged as ``CommRecord.down_bits``). Each worker draws an
+  independent participation flag per round (straggler drop-out); the
+  server averages with participation weights, or FedDropoutAvg-style
+  per-element nonzero-mask weights (``agg='sparsity'``), reusing each
+  absent worker's cached contribution — which in the lazy path is its
+  reference gradient, exactly LAQ's per-worker staleness model.
+
+The scale phase stays a global ``pmax`` over ALL workers either way: the
+shared quantization grid must not move when a worker sits a round out, or
+cached codes would dequantize against the wrong scale.
+
+``as_wire`` is the single entry point: it passes an existing wire through
+unchanged, so call sites that still hold a bare ``AxisComm`` (tests,
+benchmarks, the GIA harness) keep working and land on the symmetric path.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.comm import AxisComm, CommRecord
+
+__all__ = [
+    "PARTICIPATION_FLAG_BITS",
+    "ServerWire",
+    "SymmetricWire",
+    "as_wire",
+]
+
+# uplink sideband of one participation round: each worker ships one f32
+# flag into the weights gather (scalar telemetry-sized — far below the
+# analysis shadow-ban floor, but charged so accounting stays exact)
+PARTICIPATION_FLAG_BITS = 32
+
+
+class SymmetricWire:
+    """All-reduce among peers — the identity wrapper over ``AxisComm``."""
+
+    kind = "symmetric"
+
+    def __init__(self, comm: Union[AxisComm, Sequence[str]]):
+        self.comm = comm if isinstance(comm, AxisComm) else AxisComm(comm)
+
+    # ---- AxisComm surface (handlers use the wire exactly like comm) ----
+    @property
+    def axis_names(self) -> tuple[str, ...]:
+        return self.comm.axis_names
+
+    def size(self) -> int:
+        return self.comm.size()
+
+    def psum(self, x: jax.Array) -> jax.Array:
+        return self.comm.psum(x)
+
+    def pmean(self, x: jax.Array) -> jax.Array:
+        return self.comm.pmean(x)
+
+    def pmax(self, x: jax.Array) -> jax.Array:
+        return self.comm.pmax(x)
+
+    def all_gather(self, x: jax.Array) -> jax.Array:
+        return self.comm.all_gather(x)
+
+    def fused_all_gather(self, xs: Sequence[jax.Array]) -> list[jax.Array]:
+        return self.comm.fused_all_gather(xs)
+
+    def fused_pmax(self, xs: Sequence[jax.Array]) -> list[jax.Array]:
+        return self.comm.fused_pmax(xs)
+
+    # ---- the topology's aggregation policy ----------------------------
+    def prepare(self, rec: CommRecord) -> None:
+        """Run (and charge) any once-per-round sideband. Callers invoke
+        this at sync start, OUTSIDE the per-method ``comp.<m>.*`` scopes,
+        so per-method accounting buckets stay exact. No-op here."""
+        return None
+
+    def average(self, stacked: jax.Array) -> jax.Array:
+        """Aggregate gathered per-worker payloads (leading worker dim)."""
+        return jnp.mean(stacked, axis=0)
+
+
+class ServerWire(SymmetricWire):
+    """Parameter-server round: per-worker participation + weighted avg.
+
+    ``participation`` is each worker's independent per-round probability
+    of uploading (1.0 = everyone, the eager-equivalent case).  ``agg``
+    picks the server's weighting: ``'participation'`` divides by the
+    number of participants; ``'sparsity'`` (FedDropoutAvg, cf. the
+    distributed_learning_simulator) divides per element by the nonzero
+    contribution count, so sparse uploads (TopK) don't dilute each other.
+    ``step`` seeds the per-round draw — pass the compressor's step
+    counter so the drop-out pattern varies over the run.
+    """
+
+    kind = "server"
+
+    def __init__(self, comm: Union[AxisComm, Sequence[str]], *,
+                 participation: float = 1.0, agg: str = "participation",
+                 seed: int = 0, step: Union[jax.Array, int, None] = None):
+        super().__init__(comm)
+        if not 0.0 < participation <= 1.0:
+            raise ValueError(
+                f"participation must be in (0, 1], got {participation}")
+        if agg not in ("participation", "sparsity"):
+            raise ValueError(f"unknown agg {agg!r}; options: "
+                             "'participation', 'sparsity'")
+        self.participation = float(participation)
+        self.agg = agg
+        self.seed = int(seed)
+        self.step = step
+        self._active: jax.Array | None = None
+        self._weights: jax.Array | None = None
+
+    def _masking(self) -> bool:
+        return self.participation < 1.0
+
+    def active(self) -> jax.Array:
+        """This worker's participation flag for the round (bool scalar,
+        locally computable: every worker can derive everyone's flag, so
+        no consensus collective is needed for the draw itself)."""
+        if self._active is None:
+            if not self._masking():
+                self._active = jnp.bool_(True)
+            else:
+                key = jax.random.fold_in(
+                    jax.random.PRNGKey(self.seed),
+                    jnp.asarray(0 if self.step is None else self.step,
+                                jnp.int32))
+                for a in self.axis_names:
+                    key = jax.random.fold_in(key, jax.lax.axis_index(a))
+                self._active = jax.random.bernoulli(key, self.participation)
+        return self._active
+
+    def prepare(self, rec: CommRecord) -> None:
+        """Gather the round's participation flags (the server must learn
+        who showed up) and charge the 32-bit sideband — once per sync."""
+        if not self._masking() or self._weights is not None:
+            return
+        with jax.named_scope("wire.participation"):
+            self._weights = self.all_gather(
+                self.active().astype(jnp.float32))
+        rec.add(PARTICIPATION_FLAG_BITS, 1)
+
+    def weights(self) -> jax.Array | None:
+        """Gathered per-worker participation weights, (n_workers,) f32 —
+        ``None`` when everyone participates (plain-mean fast path)."""
+        if self._masking() and self._weights is None:
+            raise RuntimeError("ServerWire.prepare(rec) must run before "
+                               "weighted aggregation — the participation "
+                               "gather is charged there")
+        return self._weights
+
+    def average(self, stacked: jax.Array) -> jax.Array:
+        w = self.weights()
+        if self.agg == "sparsity":
+            mask = (stacked != 0).astype(jnp.float32)
+            if w is not None:
+                mask = mask * w.reshape((-1,) + (1,) * (stacked.ndim - 1))
+            denom = jnp.maximum(jnp.sum(mask, axis=0), 1.0)
+            return jnp.sum(stacked * mask, axis=0) / denom
+        if w is None:
+            return jnp.mean(stacked, axis=0)
+        wb = w.reshape((-1,) + (1,) * (stacked.ndim - 1))
+        return jnp.sum(stacked * wb, axis=0) / jnp.maximum(jnp.sum(w), 1.0)
+
+    def pmean(self, x: jax.Array) -> jax.Array:
+        """Participation-weighted mean for psum-shaped traffic (raw fp32
+        leaves, ``wire='psum_sim'``, the warm-up shadow): each worker
+        scales its term by its own flag, the denominator comes from the
+        already-gathered weights — still ONE collective, and exactly
+        ``comm.pmean`` at full participation (mean == sum / size)."""
+        w = self.weights()
+        if w is None:
+            return self.comm.pmean(x)
+        mine = self.active().astype(x.dtype)
+        return self.psum(x * mine) / jnp.maximum(
+            jnp.sum(w), 1.0).astype(x.dtype)
+
+
+def as_wire(comm: Union[AxisComm, SymmetricWire, Sequence[str]], *,
+            topology: str = "symmetric", participation: float = 1.0,
+            agg: str = "participation", seed: int = 0,
+            step: Union[jax.Array, int, None] = None) -> SymmetricWire:
+    """Wrap a bare ``AxisComm`` in the requested wire; pass an existing
+    wire through unchanged (so nested calls can't double-wrap)."""
+    if isinstance(comm, SymmetricWire):
+        return comm
+    if topology == "symmetric":
+        return SymmetricWire(comm)
+    if topology == "server":
+        return ServerWire(comm, participation=participation, agg=agg,
+                          seed=seed, step=step)
+    raise ValueError(f"unknown wire topology {topology!r}; "
+                     "options: 'symmetric', 'server'")

@@ -18,7 +18,20 @@ import jax
 import numpy as np
 
 __all__ = ["LMDataConfig", "lm_batch", "ImageDataConfig", "image_batch",
-           "class_templates"]
+           "class_templates", "client_label_probs"]
+
+
+def client_label_probs(n_classes: int, n_clients: int, alpha: float,
+                       seed: int = 0) -> np.ndarray:
+    """Per-client class distributions for federated non-IID sampling:
+    one Dirichlet(alpha) draw per client over the class simplex — the
+    standard label-skew partition (small alpha = each client sees a few
+    classes, large alpha -> uniform/IID). Deterministic in ``seed`` so
+    every worker derives the identical partition."""
+    if alpha <= 0:
+        raise ValueError(f"noniid alpha must be > 0, got {alpha}")
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 9917]))
+    return rng.dirichlet(np.full(n_classes, alpha), size=n_clients)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,9 +43,13 @@ class LMDataConfig:
     noise: float = 0.15     # fraction of corrupted positions
     n_codebooks: int = 0
     seed: int = 0
+    # federated non-IID: Dirichlet concentration reshaping each client's
+    # unigram prior (0 = IID, every client samples the shared zipf base)
+    noniid_alpha: float = 0.0
 
 
-def lm_batch(cfg: LMDataConfig, step: int) -> dict[str, np.ndarray]:
+def lm_batch(cfg: LMDataConfig, step: int, *,
+             client: int | None = None) -> dict[str, np.ndarray]:
     """Deterministic batch for a given step (restart-safe data order).
 
     Pure numpy by design: this is the HOST side of the input pipeline, the
@@ -41,7 +58,14 @@ def lm_batch(cfg: LMDataConfig, step: int) -> dict[str, np.ndarray]:
     main thread on the dispatch locks (measured 3-4x slowdown of the whole
     loop on CPU) and queues work on the very device the step needs. The
     ``tokens`` array crosses to the device via the batch shardings
-    (``device_put`` / jit ``in_shardings``)."""
+    (``device_put`` / jit ``in_shardings``).
+
+    ``client`` + ``cfg.noniid_alpha > 0`` select a federated non-IID
+    shard: the client's unigram prior is a Dirichlet(alpha * zipf)
+    reshaping of the shared base — small alpha concentrates each client
+    on its own token subset, large alpha recovers the IID prior. The
+    draw is deterministic per client (not per step), so a client's
+    distribution is stable over the run, as in a real silo."""
     rng = np.random.default_rng(np.random.SeedSequence([cfg.seed, step]))
     shape = (cfg.batch, cfg.seq_len)
     cb = (cfg.n_codebooks,) if cfg.n_codebooks else ()
@@ -50,6 +74,11 @@ def lm_batch(cfg: LMDataConfig, step: int) -> dict[str, np.ndarray]:
     # zipf-ish base: sample from a skewed categorical
     ranks = np.arange(1, cfg.vocab_size + 1, dtype=np.float64)
     p = ranks ** -1.1
+    if client is not None and cfg.noniid_alpha > 0:
+        crng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, 9917, client]))
+        p = crng.dirichlet(cfg.noniid_alpha * cfg.vocab_size * p / p.sum())
+        p = np.maximum(p, 1e-12)
     base = rng.choice(cfg.vocab_size, size=(cfg.batch, cfg.period) + cb,
                       p=p / p.sum())
     reps = -(-cfg.seq_len // cfg.period)
@@ -68,6 +97,9 @@ class ImageDataConfig:
     batch: int = 128
     noise: float = 0.35
     seed: int = 0
+    # federated non-IID: Dirichlet label skew across clients (0 = IID)
+    noniid_alpha: float = 0.0
+    n_clients: int = 0
 
 
 def class_templates(cfg: ImageDataConfig) -> jax.Array:
@@ -76,10 +108,22 @@ def class_templates(cfg: ImageDataConfig) -> jax.Array:
     return jax.random.normal(key, (cfg.n_classes, cfg.hw, cfg.hw, cfg.channels))
 
 
-def image_batch(cfg: ImageDataConfig, step: int) -> dict[str, jax.Array]:
+def image_batch(cfg: ImageDataConfig, step: int, *,
+                client: int | None = None) -> dict[str, jax.Array]:
+    """One batch; with ``client`` + ``cfg.noniid_alpha > 0`` the labels
+    draw from that client's Dirichlet row (:func:`client_label_probs`) —
+    the standard federated label-skew partition."""
     key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+    if client is not None:
+        key = jax.random.fold_in(key, client)
     k1, k2 = jax.random.split(key)
-    labels = jax.random.randint(k1, (cfg.batch,), 0, cfg.n_classes)
+    if client is not None and cfg.noniid_alpha > 0:
+        probs = client_label_probs(cfg.n_classes, max(cfg.n_clients, client + 1),
+                                   cfg.noniid_alpha, cfg.seed)[client]
+        labels = jax.random.choice(k1, cfg.n_classes, (cfg.batch,),
+                                   p=jax.numpy.asarray(probs))
+    else:
+        labels = jax.random.randint(k1, (cfg.batch,), 0, cfg.n_classes)
     mu = class_templates(cfg)[labels]
     x = mu + cfg.noise * jax.random.normal(k2, mu.shape)
     return {"images": x, "labels": labels}

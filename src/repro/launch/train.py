@@ -20,6 +20,7 @@ if os.environ.get("REPRO_DEVICES"):
                                + os.environ["REPRO_DEVICES"])
 
 import argparse
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -86,7 +87,31 @@ def main() -> None:
     ap.add_argument("--rank", type=int, default=1)
     ap.add_argument("--bits", type=int, default=8)
     ap.add_argument("--alpha", type=float, default=10.0)
-    ap.add_argument("--wire", default="allgather_codes")
+    ap.add_argument("--wire", default="symmetric",
+                    choices=["symmetric", "server"],
+                    help="wire topology: 'symmetric' all-reduce among "
+                         "peers (the historical path) or 'server' — a "
+                         "parameter-server round with per-worker "
+                         "participation draws, weighted server-side "
+                         "aggregation and per-worker lazy decisions")
+    ap.add_argument("--participation", type=float, default=1.0,
+                    help="server wire: each worker's independent "
+                         "per-round upload probability (straggler "
+                         "drop-out; 1.0 = everyone)")
+    ap.add_argument("--agg", default="participation",
+                    choices=["participation", "sparsity"],
+                    help="server aggregation weighting: divide by the "
+                         "participant count, or FedDropoutAvg per-element "
+                         "nonzero masking ('sparsity')")
+    ap.add_argument("--participation-seed", type=int, default=0)
+    ap.add_argument("--noniid-alpha", type=float, default=0.0,
+                    help="federated non-IID data: Dirichlet concentration "
+                         "reshaping each DP worker's token prior (0 = "
+                         "IID; smaller = more skew)")
+    ap.add_argument("--wire-mode", default="allgather_codes",
+                    choices=["allgather_codes", "psum_sim"],
+                    help="wire modelling: exact packed code gather, or "
+                         "the psum-simulated ring all-reduce")
     ap.add_argument("--avg-mode", default="paper")
     ap.add_argument("--fuse", action="store_true")
     ap.add_argument("--comp-dtype", default="float32")
@@ -126,7 +151,7 @@ def main() -> None:
     decay = parse_decay_spec(args.decay) if args.decay else ()
     comp_cfg = CompressorConfig(name=args.compressor, rank=args.rank,
                                 bits=args.bits, alpha=args.alpha,
-                                wire=args.wire, avg_mode=args.avg_mode,
+                                wire=args.wire_mode, avg_mode=args.avg_mode,
                                 fuse_collectives=args.fuse,
                                 state_dtype=args.comp_dtype,
                                 policy=args.policy or cfg.compression_policy,
@@ -136,7 +161,11 @@ def main() -> None:
                                 lazy_thresh=args.lazy_thresh,
                                 max_stale=args.max_stale,
                                 lazy_adaptive=args.lazy_adaptive,
-                                lazy_mode=args.lazy_mode)
+                                lazy_mode=args.lazy_mode,
+                                topology=args.wire,
+                                participation=args.participation,
+                                agg=args.agg,
+                                participation_seed=args.participation_seed)
     compressor = make_model_compressor(cfg, comp_cfg)
     if getattr(compressor, "plan_report", None):
         from repro.core.policy import format_plan_report
@@ -144,10 +173,26 @@ def main() -> None:
     optimizer = make_optimizer(args.optimizer, args.lr)
 
     data_cfg = LMDataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
-                            batch=args.batch, n_codebooks=cfg.n_codebooks)
+                            batch=args.batch, n_codebooks=cfg.n_codebooks,
+                            noniid_alpha=args.noniid_alpha)
+    n_dp = 1
+    for a, s in mesh.shape.items():
+        if a in ("pod", "data"):
+            n_dp *= s
 
     def batch_fn(step: int):
-        b = lm_batch(data_cfg, step)
+        if args.noniid_alpha > 0:
+            # federated data layout: DP worker c's rows come from client
+            # c's skewed prior (batch rows shard over dp in order)
+            if args.batch % n_dp:
+                raise ValueError(f"--noniid-alpha needs --batch divisible "
+                                 f"by the {n_dp} DP workers, got {args.batch}")
+            per = dataclasses.replace(data_cfg, batch=args.batch // n_dp)
+            chunks = [lm_batch(per, step, client=c) for c in range(n_dp)]
+            b = {k: np.concatenate([ch[k] for ch in chunks])
+                 for k in chunks[0]}
+        else:
+            b = lm_batch(data_cfg, step)
         if cfg.cond_len:
             # pure numpy (matches conditioning_stub's distribution): this
             # runs on the async runtime's prefetch thread, where eager jax

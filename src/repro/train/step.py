@@ -158,6 +158,10 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, compressor: GradCompressor,
         # next to the byte-side cost so both regressions show up in logs
         metrics["collectives_per_step"] = jnp.asarray(
             rec.effective_collectives(), jnp.float32)
+        # server-wire downlink (the aggregate broadcast) — zero on the
+        # symmetric wire, so the headline uplink figure is unchanged
+        metrics["down_mb_per_step"] = jnp.asarray(
+            rec.down_bits / 8e6, jnp.float32)
         new_state = dict(
             params=new_params, opt=new_opt,
             comp=jax.tree.map(lambda x: x[None], comp_local),
@@ -218,7 +222,8 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, compressor: GradCompressor,
 
 
 def _metric_keys(cfg: ModelConfig) -> list[str]:
-    keys = ["ce", "loss", "wire_mb_per_step", "collectives_per_step"]
+    keys = ["ce", "loss", "wire_mb_per_step", "collectives_per_step",
+            "down_mb_per_step"]
     if cfg.n_experts:
         keys.append("moe_aux")
     if cfg.mtp:

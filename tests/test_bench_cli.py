@@ -32,12 +32,16 @@ def test_known_only_section_runs():
     assert "comm_cost/CIFAR-10/lq_sgd" in out.stdout
 
 
-def _fresh_payloads(tmp_path, cr, *, ramps_down=True, in_band=True):
+def _fresh_payloads(tmp_path, cr, *, ramps_down=True, in_band=True,
+                    fed_passed=True):
     cc = {"lazy_sweep": {
         "gate": {"passed": True},
         "adaptive": {"ramps_down": ramps_down, "acc_within_band": in_band,
                      "fire_rate_windows": [1.0, 0.5, 0.1],
                      "fixed_fire_rate": 1.0, "acc": 1.0, "fixed_acc": 1.0},
+    }, "federated": {
+        "gate": {"passed": fed_passed, "row": "federated_gate",
+                 "wire_ratio": 0.24, "acc_drop": 0.0},
     }}
     st = {"speedup_async_vs_sync": 1.2,
           "lazy_elision": {"speedup_elide_vs_gate": 1.15,
@@ -58,6 +62,14 @@ def test_adaptive_gate_is_hard(tmp_path):
     assert any("ramp" in m for m in msgs)
     _fresh_payloads(tmp_path, cr, in_band=False)
     assert any("accuracy" in m for m in cr.check_lazy_gate(str(tmp_path)))
+    _fresh_payloads(tmp_path, cr, fed_passed=False)
+    msgs = cr.check_lazy_gate(str(tmp_path))
+    assert any(m.startswith("HARD") and "federated" in m for m in msgs)
+    # a payload with no federated key at all is a HARD miss, not a skip
+    (tmp_path / cr.CC).write_text(json.dumps({"lazy_sweep": {
+        "gate": {"passed": True}}}))
+    assert any("federated.gate missing" in m
+               for m in cr.check_lazy_gate(str(tmp_path)))
 
 
 def test_history_append(tmp_path):

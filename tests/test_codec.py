@@ -325,6 +325,27 @@ def test_fused_all_gather_rejects_mixed_dtypes():
         jax.vmap(worker, axis_name="data")(jnp.ones((2, 4)))
 
 
+def test_fused_pmax_rejects_non_f32():
+    """Scale reductions are f32 by contract: a half-precision scale slipped
+    into the fused pmax would silently widen (or worse, overflow the
+    flattened concat) — the comm layer must refuse instead."""
+    comm = AxisComm(("data",))
+
+    def worker(x):
+        return comm.fused_pmax([x.astype(jnp.float32),
+                                x.astype(jnp.bfloat16)])
+
+    with pytest.raises(ValueError, match="float32"):
+        jax.vmap(worker, axis_name="data")(jnp.ones((2, 4)))
+
+    def ok(x):
+        return comm.fused_pmax([x.astype(jnp.float32)])
+
+    out = jax.vmap(ok, axis_name="data")(jnp.arange(8.0).reshape(2, 4))
+    np.testing.assert_array_equal(np.asarray(out[0]),
+                                  np.tile([4.0, 5, 6, 7], (2, 1)))
+
+
 def test_codec_phase_singleton_matches_manual():
     """codec_phase on a 1-list reproduces quantize -> gather -> mean-of-
     codes -> expand done by hand."""

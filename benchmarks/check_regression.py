@@ -50,6 +50,7 @@ CC = "BENCH_comm_cost.json"
 ST = "BENCH_step_time.json"
 GL = "BENCH_graph_lint.json"
 SV = "BENCH_serve.json"
+PV = "BENCH_privacy.json"
 
 HISTORY = "BENCH_history.jsonl"
 
@@ -78,6 +79,8 @@ HISTORY_SERIES = [
     (SV, "gate.q8_speedup_vs_fp32_loop"),
     # cache-leakage SSIM/PSNR per cache variant (representation fidelity)
     (SV, "leakage."),
+    # privacy Pareto: (epsilon, ssim, final_loss) per randomized-codec row
+    (PV, "pareto.rows."),
 ]
 
 # (file, dotted-path prefix, lower_is_better, relative tolerance, hard)
@@ -217,6 +220,41 @@ def check_lazy_gate(fresh_dir):
                 f"{g.get('speedup_target')}x) — wall-clock, not gated",
                 file=sys.stderr,
             )
+    pv = _load(os.path.join(fresh_dir, PV))
+    if pv is not None:  # privacy Pareto gate (PR: randomized codecs)
+        pareto = pv.get("pareto")
+        if pareto is None:
+            hint = "run `benchmarks.run --only gia_ssim --json`"
+            out.append(f"HARD: pareto section missing from {PV} ({hint})")
+        else:
+            g = pareto.get("gate", {})
+            if g.get("missing_epsilon"):
+                out.append(
+                    "HARD: privacy Pareto rows missing the epsilon column: "
+                    f"{g['missing_epsilon']}"
+                )
+            bad = [
+                c
+                for c in g.get("checks", [])
+                if not (
+                    c.get("wire_ok", True) and c.get("ssim_ok") and c.get("loss_ok")
+                )
+            ]
+            if bad or not g.get("passed"):
+                pairs = [
+                    (
+                        c["randomized"],
+                        c["posthoc"],
+                        round(c["ssim_randomized"], 4),
+                        round(c["ssim_posthoc"], 4),
+                    )
+                    for c in bad
+                ]
+                out.append(
+                    "HARD: privacy Pareto dominance failed — randomized "
+                    "codecs must match post-hoc noise at equal "
+                    f"(epsilon, wire bits): {pairs or g}"
+                )
     return out
 
 

@@ -10,18 +10,34 @@ benchmark measured) and steady-state (after warm-up, the quantity the
 paper's claim is actually about). Small convnet + smooth target image keep
 this CPU-tractable; the ordering — not the absolute SSIM — is the claim.
 
+Privacy Pareto (PR: randomized codecs): a second sweep compares the
+in-codec randomized quantizers (``dlog`` with a calibrated DP budget,
+``lrq`` layered) against the strawman of the same deterministic
+reconstruction plus post-hoc Gaussian noise at matched per-step epsilon.
+The strawman's payload (codes + continuous noise) no longer fits the
+b-bit codebook, so its honest wire is fp32 — the structural axis the
+randomized codecs dominate on. Rows carry (epsilon, wire_bits, ssim,
+final_loss); the CI gate (benchmarks/check_regression.py) hard-fails
+unless each randomized row ships strictly fewer bits AND leaks no more
+(mean attack SSIM) AND trains no worse at the same privacy spend.
+
 ``bench(quick)`` returns (csv_rows, json_payload); the payload is what
 ``python -m benchmarks.run --only gia_ssim --json`` writes to
 ``BENCH_privacy.json`` (schema documented in README "Trustworthiness").
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import CompressorConfig
-from repro.core.privacy import GIAConfig, HarnessConfig, sweep_methods
+from repro.core.compressors import make_compressor
+from repro.core.privacy import (GIAConfig, HarnessConfig,
+                                PostHocNoiseCompressor, sweep_methods)
+from repro.core.privacy.accounting import gaussian_epsilon
 from repro.models.common import KeyGen
 
 BENCH_JSON = "BENCH_privacy.json"
@@ -54,10 +70,12 @@ def _net(p, x):
     return jnp.mean(h, axis=(1, 2)) @ p["w"] + p["b"]
 
 
+def _loss_fn(p, x, y):
+    return jnp.mean(-jax.nn.log_softmax(_net(p, x))[jnp.arange(x.shape[0]), y])
+
+
 def _grad_fn(p, x, y):
-    def loss(p):
-        return jnp.mean(-jax.nn.log_softmax(_net(p, x))[jnp.arange(x.shape[0]), y])
-    return jax.grad(loss)(p)
+    return jax.grad(_loss_fn)(p, x, y)
 
 
 def _target_image():
@@ -76,6 +94,153 @@ def harness_config(quick: bool = False) -> HarnessConfig:
         n_attack_seeds=8,
         victim_lr=0.02,
         gia=GIAConfig(steps=240 if quick else 300, lr=0.05, tv_coef=5e-3))
+
+
+# ---- privacy Pareto: randomized codecs vs post-hoc noise -----------------
+# Dominance at matched per-step epsilon: the post-hoc gradient is the
+# quantized wire PLUS continuous Gaussian noise — the sum no longer lives
+# in the b-bit codebook, so shipping it honestly takes the fp32 wire. The
+# randomized codec keeps the compressed wire (strictly better on bits)
+# and must tie on leakage and accuracy within measurement tolerance.
+# Leakage compares the MEAN attack SSIM over restart seeds: the best-of-N
+# order statistic the headline rows quote is too noisy an estimator to
+# difference two methods against each other. Even the mean is bimodal at
+# CI scale (contrast-inverted basins score negative SSIM), so its
+# tolerance is a catastrophic-leakage backstop, not the dominance axis —
+# wire bits and the epsilon ledger are exact, loss is stable.
+PARETO_DELTA = 1e-5
+PARETO_EPS = (16.0, 48.0)  # per-use dlog budgets (strong / mild noise)
+DOMINANCE_SSIM_TOL = 0.12  # randomized may not leak more than posthoc + tol
+DOMINANCE_LOSS_TOL = 0.10  # ... nor train >10% worse (relative, + 0.02 abs)
+
+
+def _pareto_base() -> CompressorConfig:
+    return CompressorConfig(name="lq_sgd", rank=1, bits=4)
+
+
+def pareto_harness_config(quick: bool = False) -> HarnessConfig:
+    # steady-state only: the Pareto claim is about training-time traffic,
+    # and one attack point per method keeps the matrix CI-tractable
+    last = 5 if quick else 9
+    return HarnessConfig(
+        train_steps=6 if quick else 10,
+        attack_steps=(last,),
+        n_attack_seeds=8,
+        victim_lr=0.02,
+        gia=GIAConfig(steps=240 if quick else 300, lr=0.05, tv_coef=5e-3))
+
+
+def _pareto_methods(abstract) -> tuple[dict, dict]:
+    """(sweep entries, per-method metadata rows). Post-hoc rows match each
+    dlog row's PER-STEP epsilon: the wrapper's Gaussian noise on the same
+    deterministic reconstruction is calibrated so both spend the same
+    budget — dominance is then tested on (wire_bits, ssim, final_loss) at
+    equal epsilon (see :func:`_pareto_gate`)."""
+    from repro.core.privacy.accounting import gaussian_sigma
+
+    base = _pareto_base()
+    methods: dict = {"lq_det": base}
+    meta: dict = {"lq_det": {"codec": "log", "epsilon": None,
+                             "epsilon_kind": None, "matched_to": None}}
+    for eps in PARETO_EPS:
+        name = f"lq_dlog_eps{eps:g}"
+        cc = CompressorConfig(name="lq_sgd", rank=1, bits=4,
+                              dp_epsilon=eps, dp_delta=PARETO_DELTA)
+        comp = make_compressor(cc, abstract)
+        eps_step = comp.privacy_epsilon_per_step(PARETO_DELTA)
+        methods[name] = cc
+        meta[name] = {"codec": "dlog", "epsilon": eps_step,
+                      "epsilon_kind": "calibrated", "matched_to": None}
+        # matched post-hoc strawman: same wire, same per-step epsilon
+        n_leaves = len(make_compressor(base, abstract).plans)
+        sigma = gaussian_sigma(eps_step / n_leaves, PARETO_DELTA)
+        pname = f"posthoc_eps{eps:g}"
+        methods[pname] = (lambda a, s=sigma:
+                          PostHocNoiseCompressor(make_compressor(base, a), s))
+        meta[pname] = {"codec": "log+posthoc", "epsilon": eps_step,
+                       "epsilon_kind": "calibrated", "matched_to": name,
+                       "sigma_norm": sigma}
+    lrq = CompressorConfig(name="lq_sgd", rank=1, bits=4,
+                           codec="lrq", lrq_layers=2)
+    eps_step = make_compressor(lrq, abstract).privacy_epsilon_per_step(
+        PARETO_DELTA)
+    methods["lq_lrq"] = lrq
+    meta["lq_lrq"] = {"codec": "lrq", "epsilon": eps_step,
+                      "epsilon_kind": "gaussian_equiv", "matched_to": None}
+    return methods, meta
+
+
+def _pareto_gate(rows: list[dict]) -> dict:
+    """Each randomized (dlog) row must dominate its matched post-hoc row:
+    strictly fewer wire bits at the same per-step epsilon (quantizer noise
+    keeps the b-bit wire; bolted-on noise forces fp32), no worse mean
+    attack SSIM and no worse final loss within tolerance. Every Pareto row
+    must carry the epsilon column."""
+    by_m = {r["method"]: r for r in rows}
+    checks, passed = [], True
+    missing_eps = [r["method"] for r in rows
+                   if r["codec"] != "log" and r.get("epsilon") is None]
+    if missing_eps:
+        passed = False
+    for r in rows:
+        m = r.get("matched_to")
+        if not m:
+            continue
+        d = by_m[m]  # the randomized row this post-hoc row is matched to
+        wire_ok = d["wire_bits"] < r["wire_bits"]
+        ssim_ok = d["ssim_mean"] <= r["ssim_mean"] + DOMINANCE_SSIM_TOL
+        loss_ok = (d["final_loss"] <= r["final_loss"]
+                   * (1 + DOMINANCE_LOSS_TOL) + 0.02)
+        checks.append({"randomized": m, "posthoc": r["method"],
+                       "epsilon": r["epsilon"],
+                       "wire_randomized": d["wire_bits"],
+                       "wire_posthoc": r["wire_bits"],
+                       "ssim_randomized": d["ssim_mean"],
+                       "ssim_posthoc": r["ssim_mean"],
+                       "loss_randomized": d["final_loss"],
+                       "loss_posthoc": r["final_loss"],
+                       "wire_ok": wire_ok, "ssim_ok": ssim_ok,
+                       "loss_ok": loss_ok})
+        passed = passed and wire_ok and ssim_ok and loss_ok
+    return {"passed": passed, "ssim_tol": DOMINANCE_SSIM_TOL,
+            "loss_tol": DOMINANCE_LOSS_TOL, "missing_epsilon": missing_eps,
+            "checks": checks}
+
+
+def _pareto_bench(quick: bool, params, img, y) -> tuple[list, dict]:
+    cfg = pareto_harness_config(quick)
+    abstract = jax.eval_shape(_grad_fn, params, img, y)
+    methods, meta = _pareto_methods(abstract)
+    wire_bits = make_compressor(_pareto_base(), abstract).wire_bits_per_step()
+    # the post-hoc payload (codes + continuous noise) is not representable
+    # in the codebook: its honest wire is the raw fp32 gradient
+    raw_bits = sum(
+        np.prod(l.shape) for l in jax.tree_util.tree_leaves(abstract)) * 32
+    rows, presults = [], []
+    points = sweep_methods(methods, _grad_fn, params, img, y, cfg,
+                           loss_fn=_loss_fn)
+    for p in points:
+        md = meta[p.method]
+        eps = md["epsilon"]
+        presults.append({
+            "method": p.method, "codec": md["codec"],
+            "epsilon": (None if eps is None or math.isinf(eps) else eps),
+            "epsilon_kind": md["epsilon_kind"],
+            "matched_to": md["matched_to"],
+            "wire_bits": int(raw_bits if md["matched_to"] else wire_bits),
+            "ssim": p.ssim, "psnr": p.psnr,
+            "ssim_mean": float(np.mean(p.seed_ssims)),
+            "final_loss": p.final_loss,
+            "attack_seconds": p.attack_seconds,
+        })
+        rows.append((f"gia_ssim/pareto/{p.method}", p.attack_seconds * 1e6,
+                     f"ssim={p.ssim:.4f} loss={p.final_loss:.4f} "
+                     f"eps={'inf' if eps is None or math.isinf(eps) else f'{eps:.1f}'}"))
+    gate = _pareto_gate(presults)
+    rows.append(("gia_ssim/pareto/gate", 0.0,
+                 f"passed={gate['passed']} pairs={len(gate['checks'])}"))
+    return rows, {"delta": PARETO_DELTA, "wire_bits": wire_bits,
+                  "rows": presults, "gate": gate}
 
 
 def bench(quick: bool = False) -> tuple[list[tuple[str, float, str]], dict]:
@@ -98,9 +263,11 @@ def bench(quick: bool = False) -> tuple[list[tuple[str, float, str]], dict]:
             "state_threaded": p.state_threaded,
             "seed_ssims": list(p.seed_ssims),
         })
+    pareto_rows, pareto = _pareto_bench(quick, params, img, y)
+    rows.extend(pareto_rows)
     payload = {
         "bench": "privacy",
-        "schema": 1,
+        "schema": 2,
         "quick": quick,
         "attack_steps": {"cold_start": 0, "steady_state": steady},
         "train_steps": cfg.train_steps,
@@ -108,6 +275,7 @@ def bench(quick: bool = False) -> tuple[list[tuple[str, float, str]], dict]:
         "gia_steps": cfg.gia.steps,
         "victim_lr": cfg.victim_lr,
         "results": results,
+        "pareto": pareto,
     }
     return rows, payload
 

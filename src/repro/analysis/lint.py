@@ -206,7 +206,10 @@ def main(argv=None):
     ap.add_argument("--warmup", type=int, default=0)
     ap.add_argument("--rank", type=int, default=1)
     ap.add_argument("--bits", type=int, default=8)
-    ap.add_argument("--wire-mode", default="allgather_codes",
+    # canonical name matches CompressorConfig.wire_accounting; --wire-mode
+    # is the pre-rename alias (PR 9 overloaded "wire" for topology)
+    ap.add_argument("--wire-accounting", "--wire-mode",
+                    dest="wire_accounting", default="allgather_codes",
                     choices=["allgather_codes", "psum_sim"])
     ap.add_argument("--wire", default="symmetric",
                     choices=["symmetric", "server"],
@@ -264,7 +267,7 @@ def main(argv=None):
         name=args.compressor,
         rank=args.rank,
         bits=args.bits,
-        wire=args.wire_mode,
+        wire_accounting=args.wire_accounting,
         topology=args.wire,
         participation=args.participation,
         agg=args.agg,

@@ -576,7 +576,7 @@ def rule_wire_dtype_hygiene(ctx: LintContext) -> RuleResult:
                     f"upcast between encode and the collective"))
         quantized = m in ("qsgd", "lq_sgd") and any(
             pl.route == "lowrank" or m == "lq_sgd" for pl in plans)
-        if quantized and ctx.cfg.wire == "psum_sim":
+        if quantized and ctx.cfg.wire_accounting == "psum_sim":
             findings.append(Finding(
                 rid, f"method group {m!r}",
                 "wire='psum_sim' ships b-bit codes through an fp32 psum "

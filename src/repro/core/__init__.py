@@ -1,11 +1,16 @@
 """LQ-SGD core: gradient compression for distributed training (the paper)."""
 from repro.core.codec import (
+    DitheredLogQuantCodec,
     Float32Codec,
+    LayeredRandQuantCodec,
     LogQuantCodec,
     QSGDCodec,
     WireCodec,
+    available_codecs,
     codec_phase,
+    make_codec,
     make_wire_codec,
+    register_codec,
 )
 from repro.core.comm import AxisComm, CommRecord
 from repro.core.composite import CompositeCompressor, PolicySchedule
@@ -51,9 +56,14 @@ __all__ = [
     "WireCodec",
     "Float32Codec",
     "LogQuantCodec",
+    "DitheredLogQuantCodec",
+    "LayeredRandQuantCodec",
     "QSGDCodec",
+    "available_codecs",
     "codec_phase",
+    "make_codec",
     "make_wire_codec",
+    "register_codec",
     "make_compressor",
     "parse_policy_spec",
     "plan_auto",

@@ -187,10 +187,12 @@ class CompositeCompressor(GradCompressor):
     # ---- state -----------------------------------------------------------
     def init_state(self, key: jax.Array) -> PyTree:
         state: dict[str, Any] = {"step": jnp.zeros((), jnp.int32)}
-        for h in self.handlers.values():
+        for m, h in self.handlers.items():
             for ns in h.namespaces:
                 state.setdefault(ns, {})
-            if h.needs_prng:
+            # PRNG need is per-group and plan-dependent (a randomized codec
+            # may reach only some leaves), not a static handler attribute
+            if h.group_needs_prng([self.plans[i] for i in self.groups[m]]):
                 state.setdefault("key", key)
         for m, idxs in self.groups.items():
             h = self.handlers[m]
@@ -220,6 +222,12 @@ class CompositeCompressor(GradCompressor):
                 state.setdefault(lazy_mod.EMA_NS, {})
                 state[lazy_mod.EMA_NS][m] = jnp.zeros((2,), jnp.float32)
         return state
+
+    def privacy_epsilon_per_step(self, delta: float = 1e-5) -> float:
+        return sum(
+            self.handlers[self.plans[i].policy.method].leaf_epsilon(
+                self.plans[i], delta)
+            for idxs in self.groups.values() for i in idxs)
 
     def _has_err(self, i: int, state: PyTree) -> bool:
         """Does leaf ``i`` carry handler error feedback? (Its innovation

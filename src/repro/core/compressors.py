@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Any, Callable
 
 import jax
@@ -80,11 +81,26 @@ class CompressorConfig:
     topk_ratio: float = 0.01
     # routing
     min_compress_numel: int = 1024
-    # wire modelling: 'allgather_codes' (exact packed wire) or 'psum_sim'
-    wire: str = "allgather_codes"
+    # wire-accounting mode: 'allgather_codes' (exact packed wire) or
+    # 'psum_sim' (ring-all-reduce simulation over fp32 codes). Renamed
+    # from `wire` (PR 9 overloaded that word: the CLI --wire means
+    # topology); the old kwarg/attribute still works but warns.
+    wire_accounting: str = "allgather_codes"
     # wire-codec backend: 'jnp_ref' (pure jnp) or 'pallas' (TPU kernels,
     # interpret-mode off-TPU) — see repro.core.codec
     quant_backend: str = "jnp_ref"
+    # wire codec override for the log-quant family: None -> 'log'
+    # deterministic (or 'dlog' when dp_epsilon > 0), or any registered
+    # log-grid codec name ('dlog', 'lrq') — see repro.core.codec
+    codec: str | None = None
+    # per-use differential-privacy budget for randomized codecs: > 0
+    # calibrates the dlog codec's Gaussian noise to (dp_epsilon, dp_delta)
+    # per transmitted message (repro.core.privacy.accounting composes
+    # across steps); 0 = no DP noise
+    dp_epsilon: float = 0.0
+    dp_delta: float = 1e-5
+    # layer count for the 'lrq' layered randomized quantizer
+    lrq_layers: int = 2
     # 'paper' = dequant(mean(codes))  [Algorithm 1 literal]
     # 'dequant_then_mean' = mean(dequant(codes))  [beyond-paper ablation]
     avg_mode: str = "paper"
@@ -141,6 +157,41 @@ class CompressorConfig:
     # mask — sparse TopK uploads don't dilute each other)
     agg: str = "participation"
     participation_seed: int = 0
+    # ---- deprecated spellings (shims; do not add fields below) -----------
+    # pre-PR-10 name of wire_accounting
+    wire: dataclasses.InitVar[str | None] = None
+
+    def __post_init__(self, wire: str | None):
+        # dataclasses.replace() forwards this InitVar via getattr — i.e.
+        # through the read shim below, which tags its value. A tagged value
+        # is a round-trip, NOT a user override: wire_accounting (always in
+        # replace()'s changes) is already authoritative, and applying the
+        # stale copy here would clobber replace(cfg, wire_accounting=...).
+        if wire is not None and not isinstance(wire, _ShimWire):
+            warnings.warn(
+                "CompressorConfig(wire=...) is deprecated; the field is now "
+                "wire_accounting= (the `wire` word now means topology, as in "
+                "the --wire CLI flag)", DeprecationWarning, stacklevel=3)
+            object.__setattr__(self, "wire_accounting", wire)
+        if self.dp_epsilon < 0:
+            raise ValueError(f"dp_epsilon must be >= 0, got {self.dp_epsilon}")
+
+
+class _ShimWire(str):
+    """Marker for values read back through the deprecated ``.wire``
+    property (compares/behaves as a plain str)."""
+
+
+def _cfg_wire_shim(self: CompressorConfig) -> str:
+    # silent read-compat: the deprecation warning fires on the WRITE path
+    # (constructing with wire=...) — warning here would fire spuriously on
+    # every dataclasses.replace(), which getattrs all init fields
+    return _ShimWire(self.wire_accounting)
+
+
+# a dataclass field named `wire` and a property can't coexist in the class
+# body; attach the deprecated read-path after the fact
+CompressorConfig.wire = property(_cfg_wire_shim)  # type: ignore[attr-defined]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -154,6 +205,12 @@ class LeafPolicy:
     bits: int = 8
     bits_q: int | None = None   # factor-Q wire bits; None -> same as bits
     topk_ratio: float = 0.01
+    # wire codec for the log-quant family: None -> cfg default ('log', or
+    # 'dlog' when a dp budget is set); 'dlog'/'lrq' pick the randomized
+    # codecs from the registry (repro.core.codec.make_codec)
+    codec: str | None = None
+    # per-use DP budget for this leaf's randomized codec; 0 -> cfg default
+    dp_epsilon: float = 0.0
     min_numel: int | None = None  # per-leaf routing-threshold override
     # lazy aggregation (repro.core.lazy): relative innovation threshold
     # (0.0 = eager) and the max consecutive skips before a forced fire
@@ -177,6 +234,13 @@ class LeafPolicy:
             raise ValueError(
                 f"lazy_adaptive is a scaling CAP: 0 (off) or >= 1, got "
                 f"{self.lazy_adaptive}")
+        if self.dp_epsilon < 0:
+            raise ValueError(f"dp_epsilon must be >= 0, got {self.dp_epsilon}")
+        if self.codec is not None:
+            from repro.core.codec import available_codecs
+            if self.codec not in available_codecs():
+                raise ValueError(f"unknown codec {self.codec!r}; "
+                                 f"available: {available_codecs()}")
 
     @property
     def eff_bits_q(self) -> int:
@@ -296,6 +360,33 @@ class LeafGroupHandler:
     def __init__(self, cfg: CompressorConfig):
         self.cfg = cfg
 
+    def group_needs_prng(self, plans) -> bool:
+        """Does syncing THESE plans consume PRNG state? Static handlers
+        answer with the class flag; codec-driven handlers (lq_sgd) answer
+        per group — a group is only charged a key when some leaf's codec
+        declares ``requires_key`` (so deterministic configs keep the exact
+        historical state pytree)."""
+        del plans
+        return self.needs_prng
+
+    def _group_key(self, state, comm) -> jax.Array:
+        """The per-worker, per-step PRNG base every randomized handler
+        derives leaf keys from: fold the step counter, then this worker's
+        axis index, into the shared state key. Leaf streams split off via
+        ``fold_in(base, leaf_index)`` (QSGD) or
+        ``fold_in(fold_in(base, leaf_index), phase)`` (factor codecs) —
+        deterministic, so reruns reproduce bit-for-bit."""
+        try:
+            base = jax.random.fold_in(state["key"], state["step"])
+        except (KeyError, TypeError) as e:
+            raise KeyError(
+                f"{type(self).__name__} uses a randomized codec but the "
+                "state has no 'key'/'step' — build via make_compressor "
+                "(the composite threads PRNG state when a group needs it)"
+            ) from e
+        return jax.random.fold_in(base,
+                                  jax.lax.axis_index(comm.axis_names[-1]))
+
     # ---- per-leaf state ---------------------------------------------------
     def init_leaf_state(self, key: jax.Array, i: int, pl: LeafPlan
                         ) -> dict[str, jax.Array]:
@@ -303,7 +394,8 @@ class LeafGroupHandler:
 
     # ---- the group sync ---------------------------------------------------
     def sync_raw(self, g: jax.Array, pl: LeafPlan, comm: AxisComm,
-                 rec: CommRecord) -> jax.Array:
+                 rec: CommRecord, *, key: jax.Array | None = None) -> jax.Array:
+        del key  # the fp32 pmean path is deterministic
         return _pmean_raw(g, comm, rec)
 
     def sync_group(self, items, state: PyTree, comm: AxisComm,
@@ -324,10 +416,18 @@ class LeafGroupHandler:
         opposed to ``leaf_wire_bits``'s semantic accounting. The two
         differ exactly where a wire is *simulated* at a different width:
         TopK's dense fp32 stand-in for the sparse payload, and
-        ``cfg.wire='psum_sim'`` shipping codes as fp32. The graph-lint
-        accounting-parity rule checks the graph against THIS figure and
-        reports where it diverges from the semantic one."""
+        ``cfg.wire_accounting='psum_sim'`` shipping codes as fp32. The
+        graph-lint accounting-parity rule checks the graph against THIS
+        figure and reports where it diverges from the semantic one."""
         return self.leaf_wire_bits(pl)
+
+    def leaf_epsilon(self, pl: LeafPlan, delta: float = 1e-5) -> float:
+        """Per-step DP epsilon spent transmitting this leaf — the sum of
+        ``epsilon_per_use`` over every encode the leaf's sync performs
+        (``inf`` for any deterministic transmission: a fully-revealed
+        message has no DP guarantee)."""
+        del delta
+        return math.inf
 
 
 class TopKHandler(LeafGroupHandler):
@@ -360,7 +460,7 @@ class TopKHandler(LeafGroupHandler):
         return {"err": jnp.zeros(pl.shape, jnp.dtype(self.cfg.state_dtype))}
 
     def sync_group(self, items, state, comm, rec):
-        from repro.core.codec import Float32Codec, codec_phase
+        from repro.core.codec import codec_phase, make_codec
         outs: dict[int, jax.Array] = {}
         new_err: dict[str, jax.Array] = {}
         comp, kepts, account = [], [], []
@@ -384,9 +484,9 @@ class TopKHandler(LeafGroupHandler):
             # dense simulation of the sparse all-reduce through the fp32
             # codec; accounting charges the k*(32+idx)-bit sparse payload
             synced = codec_phase(kepts, [pl.stacked for _, _, pl in comp],
-                                 Float32Codec(), comm, rec,
+                                 make_codec("float32"), comm, rec,
                                  avg_mode=self.cfg.avg_mode,
-                                 wire=self.cfg.wire,
+                                 wire=self.cfg.wire_accounting,
                                  fuse=self.cfg.fuse_collectives,
                                  account_bits=account)
             for (i, g, pl), s in zip(comp, synced):
@@ -421,14 +521,13 @@ class QSGDHandler(LeafGroupHandler):
     needs_prng = True
 
     def _codec(self, bits: int):
-        from repro.core.codec import QSGDCodec
-        return QSGDCodec(bits=bits, backend=self.cfg.quant_backend)
+        from repro.core.codec import make_codec
+        return make_codec("qsgd", bits=bits, backend=self.cfg.quant_backend)
 
     def sync_group(self, items, state, comm, rec):
         from repro.core.codec import codec_phase
-        base = jax.random.fold_in(state["key"], state["step"])
-        # independent stochastic rounding per worker
-        base = jax.random.fold_in(base, jax.lax.axis_index(comm.axis_names[-1]))
+        # per-worker, per-step base; leaf streams fold in the global index
+        base = self._group_key(state, comm)
         outs: dict[int, jax.Array] = {}
         comp = []
         for i, g, pl in items:
@@ -444,7 +543,7 @@ class QSGDHandler(LeafGroupHandler):
             synced = codec_phase(
                 [g for _, g, _ in sub], [pl.stacked for _, _, pl in sub],
                 self._codec(bits), comm, rec, avg_mode="dequant_then_mean",
-                wire=self.cfg.wire, fuse=self.cfg.fuse_collectives,
+                wire=self.cfg.wire_accounting, fuse=self.cfg.fuse_collectives,
                 keys=[jax.random.fold_in(base, i) for i, _, _ in sub])
             for (i, g, pl), s in zip(sub, synced):
                 outs[i] = s.astype(g.dtype)
@@ -464,7 +563,7 @@ class QSGDHandler(LeafGroupHandler):
             return self.raw_wire_bits(pl, numel)
         codec = self._codec(pl.policy.bits)
         L = pl.shape[0] if pl.stacked else 1
-        if self.cfg.wire == "psum_sim":  # codes ride the psum as fp32
+        if self.cfg.wire_accounting == "psum_sim":  # codes ride the psum as fp32
             return numel * 32 + codec.scale_bits(L)
         return codec.wire_bits(numel) + codec.scale_bits(L)
 
@@ -484,7 +583,8 @@ class GradCompressor:
         self.cfg = cfg
         self.treedef = jax.tree_util.tree_structure(abstract_grads)
         policy = LeafPolicy(method=self.method, rank=cfg.rank, bits=cfg.bits,
-                            bits_q=cfg.bits_q, topk_ratio=cfg.topk_ratio)
+                            bits_q=cfg.bits_q, topk_ratio=cfg.topk_ratio,
+                            codec=cfg.codec, dp_epsilon=cfg.dp_epsilon)
         self.plans = build_plans(abstract_grads, cfg.rank,
                                  cfg.min_compress_numel, stacked,
                                  policy=policy)
@@ -629,6 +729,21 @@ class GradCompressor:
         return {self.method: sum(self.handler.leaf_physical_bits(pl)
                                  for pl in self.plans)}
 
+    def privacy_epsilon_per_step(self, delta: float = 1e-5) -> float:
+        """Per-step DP epsilon under basic composition over every leaf's
+        transmissions. ``inf`` as soon as ANY leaf ships deterministically
+        (one fully-revealed tensor voids the step's guarantee). Compose
+        across steps with ``repro.core.privacy.accounting``."""
+        return sum(self.handler.leaf_epsilon(pl, delta) for pl in self.plans)
+
+    def privacy_budget(self, steps: int, *, delta: float = 1e-5,
+                       sampling_rate: float = 1.0):
+        """End-of-training :class:`~repro.core.privacy.accounting.
+        TrainingBudget` for a ``steps``-step run of this compressor."""
+        from repro.core.privacy.accounting import compose_training
+        return compose_training(self.privacy_epsilon_per_step(delta), steps,
+                                delta=delta, sampling_rate=sampling_rate)
+
 
 class NoCompression(GradCompressor):
     """Vanilla distributed SGD: full-precision all-reduce (paper 'Original SGD')."""
@@ -676,8 +791,12 @@ def make_compressor(cfg: CompressorConfig, abstract_grads: PyTree,
     # server drop-out needs the composite: it owns the step counter the
     # participation draw folds in and the per-worker state freezing
     server_dropout = cfg.topology == "server" and cfg.participation < 1.0
+    # randomized codecs need the composite too: it owns the state
+    # 'key'/'step' pair the per-leaf PRNG streams derive from
+    randomized = cfg.dp_epsilon > 0 or cfg.codec is not None
     if (cfg.policy not in (None, "uniform") or cfg.warmup_steps
-            or cfg.schedule_decay or cfg.lazy_thresh > 0 or server_dropout):
+            or cfg.schedule_decay or cfg.lazy_thresh > 0 or server_dropout
+            or randomized):
         from repro.core.composite import CompositeCompressor, PolicySchedule
         from repro.core.policy import plan_auto, resolve_policies
         report = None

@@ -16,6 +16,14 @@ Eq. 5/6):
 nibble-packed two-per-int8, so the gathered arrays really are b/8 of the
 int8 bytes — wire accounting equals actual array bytes.
 
+Randomized wire: ``cfg.codec`` / per-leaf ``LeafPolicy.codec`` swap the
+deterministic ``log`` codec for its randomized relatives (``dlog`` with a
+calibrated DP budget, ``lrq`` layered-randomized — see
+:mod:`repro.core.codec`); a nonzero ``dp_epsilon`` with no explicit codec
+defaults to ``dlog``. Wire format and bit accounting are unchanged — only
+the rounding rule is stochastic, with per-(leaf, phase) keys derived in
+:class:`~repro.core.powersgd.PowerSGDHandler`.
+
 Per-leaf bit-widths come from each plan's
 :class:`~repro.core.compressors.LeafPolicy` (``bits`` for the P phase,
 ``bits_q`` for the Q phase — the paper allows b_p != b_q); leaves with
@@ -44,7 +52,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.codec import LogQuantCodec, WireCodec, codec_phase
+from repro.core.codec import WireCodec, codec_phase, make_codec
 from repro.core.compressors import GradCompressor
 from repro.core.powersgd import PowerSGDHandler
 
@@ -56,9 +64,25 @@ class LQSGDHandler(PowerSGDHandler):
 
     method = "lq_sgd"
 
-    def _codec(self, bits: int) -> WireCodec:
-        return LogQuantCodec(bits=bits, alpha=self.cfg.alpha,
-                             backend=self.cfg.quant_backend)
+    def _leaf_codec(self, pl, bits: int) -> WireCodec:
+        """Resolve the log-quant family member for one leaf.
+
+        Selection: ``pl.policy.codec`` (per-leaf override from the policy /
+        auto-planner) > ``cfg.codec`` > the default family — plain ``log``,
+        or ``dlog`` when this leaf carries a DP budget (noise has to come
+        from somewhere). Privacy knobs (``dp_epsilon``/``dp_delta``,
+        ``n_layers``) ride in from the same policy/cfg pair.
+        """
+        eps = pl.policy.dp_epsilon or self.cfg.dp_epsilon
+        name = pl.policy.codec or self.cfg.codec or (
+            "dlog" if eps > 0 else "log")
+        knobs = dict(bits=bits, alpha=self.cfg.alpha,
+                     backend=self.cfg.quant_backend)
+        if name == "dlog":
+            knobs.update(dp_epsilon=eps, dp_delta=self.cfg.dp_delta)
+        elif name == "lrq":
+            knobs.update(n_layers=min(self.cfg.lrq_layers, max(1, bits - 1)))
+        return make_codec(name, **knobs)
 
     def _leaf_bits_p(self, pl) -> int:
         return pl.policy.bits
@@ -66,28 +90,42 @@ class LQSGDHandler(PowerSGDHandler):
     def _leaf_bits_q(self, pl) -> int:
         return pl.policy.eff_bits_q
 
-    def sync_raw(self, g, pl, comm, rec):
+    def _raw_codec(self, pl) -> WireCodec:
+        return self._leaf_codec(pl, pl.policy.bits)
+
+    def _raw_needs_key(self, pl) -> bool:
+        return self._raw_codec(pl).requires_key
+
+    def sync_raw(self, g, pl, comm, rec, *, key=None):
         # Algorithm 1's code-domain mean applies to the low-rank factors;
         # for raw leaves (biases/norms, sign-mixed small tensors) the
         # log-domain mean is badly biased (a quasi-geometric mean), so the
         # quantized raw path always averages dequantized values.
+        codec = self._raw_codec(pl)
         out = codec_phase([g.astype(jnp.float32)], [False],
-                          self._codec(pl.policy.bits), comm, rec,
-                          avg_mode="dequant_then_mean", wire=self.cfg.wire,
-                          fuse=False)[0]
+                          codec, comm, rec,
+                          avg_mode="dequant_then_mean",
+                          wire=self.cfg.wire_accounting,
+                          fuse=False,
+                          keys=[key] if codec.requires_key else None)[0]
         return out.astype(g.dtype)
 
     def raw_wire_bits(self, pl, numel: int) -> int:
-        codec = self._codec(pl.policy.bits)
+        codec = self._raw_codec(pl)
         return codec.wire_bits(numel) + codec.scale_bits(1)
 
     def leaf_physical_bits(self, pl):
-        if pl.route == "lowrank" or self.cfg.wire != "psum_sim":
+        if pl.route == "lowrank" or self.cfg.wire_accounting != "psum_sim":
             return super().leaf_physical_bits(pl)
         # quantized raw leaves under psum_sim: codes ride the psum as fp32
         from repro.core.compressors import _numel
-        codec = self._codec(pl.policy.bits)
+        codec = self._raw_codec(pl)
         return _numel(pl.shape) * 32 + codec.scale_bits(1)
+
+    def leaf_epsilon(self, pl, delta: float = 1e-5) -> float:
+        if pl.route == "lowrank":
+            return super().leaf_epsilon(pl, delta)
+        return self._raw_codec(pl).epsilon_per_use(delta)
 
 
 class LQSGDCompressor(GradCompressor):

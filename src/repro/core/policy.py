@@ -77,6 +77,8 @@ _POLICY_KNOBS = {
     "lazy_thresh": float,
     "max_stale": int,
     "lazy_adaptive": float,
+    "codec": str,
+    "dp_epsilon": float,
 }
 
 
@@ -84,6 +86,7 @@ def uniform_policy(cfg: CompressorConfig) -> LeafPolicy:
     method = _NAME_ALIASES.get(cfg.name, cfg.name)
     return LeafPolicy(method=method, rank=cfg.rank, bits=cfg.bits,
                       bits_q=cfg.bits_q, topk_ratio=cfg.topk_ratio,
+                      codec=cfg.codec, dp_epsilon=cfg.dp_epsilon,
                       lazy_thresh=cfg.lazy_thresh, max_stale=cfg.max_stale,
                       lazy_adaptive=cfg.lazy_adaptive)
 
@@ -241,10 +244,34 @@ def _quant_err(bits: int) -> float:
     return 2.0 ** -(bits - 1)
 
 
+def _privacy_terms(codec: str | None, dp_epsilon: float, dp_delta: float,
+                   lrq_layers: int, bits: int) -> tuple[str | None, float, float]:
+    """(effective codec name, dp_epsilon, extra error proxy) for the
+    privacy knobs. The error proxy adds the std of the codec's injected
+    noise in normalized units: the calibrated Gaussian sigma for ``dlog``
+    (repro.core.privacy.accounting), and the layer-mixture rounding std
+    for ``lrq`` — so tightening dp_epsilon (more noise) pushes the planner
+    toward higher-fidelity bits/ranks: the privacy-vs-wire-vs-error trade."""
+    if dp_epsilon <= 0 and codec is None:
+        return None, 0.0, 0.0
+    eff = codec or "dlog"
+    extra = 0.0
+    if eff == "lrq":
+        # extra rounding noise of the layer mixture over plain b-bit quant
+        mix = (sum(4.0 ** j for j in range(lrq_layers)) / lrq_layers) ** 0.5
+        extra += _quant_err(bits) * mix
+    if dp_epsilon > 0 and eff == "dlog":
+        from repro.core.privacy.accounting import gaussian_sigma
+        extra += gaussian_sigma(dp_epsilon, dp_delta)
+    return eff, dp_epsilon, extra
+
+
 def _candidates(pl, numel: int, cm: CostModel, *,
                 ranks, bits_options, topk_ratios, qsgd_bits,
                 lazy_options: Sequence[tuple[float, int]] = (),
-                lazy_adaptive: float = 0.0
+                lazy_adaptive: float = 0.0,
+                codec: str | None = None, dp_epsilon: float = 0.0,
+                dp_delta: float = 1e-5, lrq_layers: int = 2
                 ) -> list[tuple[LeafPolicy, float]]:
     """(policy, error-proxy) candidates for one leaf; the caller attaches
     wire bits via the real handler accounting.
@@ -258,6 +285,15 @@ def _candidates(pl, numel: int, cm: CostModel, *,
     out: list[tuple[LeafPolicy, float]] = [(LeafPolicy(method="raw"), 0.0)]
     inst = pl.shape[1:] if pl.stacked else pl.shape
     compressible = pl.route == "lowrank"
+
+    def _lq(b: int, **kw) -> tuple[LeafPolicy, float]:
+        """An lq_sgd candidate, with the privacy knobs (and their noise
+        error) applied when the config asks for a randomized codec."""
+        eff, eps, extra = _privacy_terms(codec, dp_epsilon, dp_delta,
+                                         lrq_layers, b)
+        return (LeafPolicy(method="lq_sgd", bits=b, codec=eff,
+                           dp_epsilon=eps, **kw), extra)
+
     if compressible:
         n, m = pl.mat_shape
         for r in ranks:
@@ -265,8 +301,8 @@ def _candidates(pl, numel: int, cm: CostModel, *,
             lr = cm.ef_discount * _lowrank_err(r_eff, n, m)
             out.append((LeafPolicy(method="powersgd", rank=r), lr))
             for b in bits_options:
-                out.append((LeafPolicy(method="lq_sgd", rank=r, bits=b),
-                            lr + _quant_err(b)))
+                pol, extra = _lq(b, rank=r)
+                out.append((pol, lr + _quant_err(b) + extra))
         for rho in topk_ratios:
             out.append((LeafPolicy(method="topk", topk_ratio=rho),
                         cm.ef_discount * (1.0 - rho) ** 0.5))
@@ -278,7 +314,8 @@ def _candidates(pl, numel: int, cm: CostModel, *,
         # raw path — the only method that saves wire here (no EF: per-step
         # distortion is the full quantization error)
         for b in bits_options:
-            out.append((LeafPolicy(method="lq_sgd", bits=b), _quant_err(b)))
+            pol, extra = _lq(b)
+            out.append((pol, _quant_err(b) + extra))
     if lazy_options:
         from repro.core.lazy import staleness_err
         lazy_variants = []
@@ -370,7 +407,11 @@ def plan_auto(abstract_grads: PyTree, stacked: PyTree | None = None, *,
                                     topk_ratios=topk_ratios,
                                     qsgd_bits=qsgd_bits,
                                     lazy_options=lazy_options,
-                                    lazy_adaptive=cfg.lazy_adaptive):
+                                    lazy_adaptive=cfg.lazy_adaptive,
+                                    codec=cfg.codec,
+                                    dp_epsilon=cfg.dp_epsilon,
+                                    dp_delta=cfg.dp_delta,
+                                    lrq_layers=cfg.lrq_layers):
             if err > budget:
                 continue
             fired_bits, pl = wire_bits(pol, path, leaf, st)
@@ -400,6 +441,8 @@ def plan_auto(abstract_grads: PyTree, stacked: PyTree | None = None, *,
             "path": path, "shape": list(probe.shape), "numel": numel,
             "method": pol.method, "rank": pol.rank, "bits": pol.bits,
             "topk_ratio": pol.topk_ratio,
+            "codec": pol.codec,
+            "epsilon": pol.dp_epsilon if pol.dp_epsilon > 0 else None,
             "lazy_thresh": pol.lazy_thresh, "max_stale": pol.max_stale,
             "lazy_adaptive": pol.lazy_adaptive,
             "p_fire": p_fire(pol.lazy_thresh, pol.max_stale,
@@ -432,6 +475,10 @@ def format_plan_report(report: list[dict]) -> str:
                  "lq_sgd": f"r{r['rank']}b{r['bits']}",
                  "topk": f"p{r['topk_ratio']}",
                  "qsgd": f"b{r['bits']}"}.get(r["method"], "")
+        if r.get("codec"):
+            knobs += f"+{r['codec']}"
+            if r.get("epsilon"):
+                knobs += f"(eps={r['epsilon']:g})"
         if r.get("lazy_thresh", 0) > 0:
             knobs += f"~lazy(p={r['p_fire']:.2f})"
         lines.append(

@@ -11,8 +11,9 @@ leaves — the dedicated :class:`PowerSGDCompressor` drives it over every
 leaf; the composite drives it over its powersgd group. Both factor phases
 ship through the wire-codec layer (:func:`repro.core.codec.codec_phase`):
 PowerSGD uses the fp32 :class:`~repro.core.codec.Float32Codec`; LQ-SGD
-subclasses the handler and swaps in the b-bit log codec — control flow is
-shared, only ``_codec`` differs. Per-leaf ranks come from each plan's
+subclasses the handler and swaps in the b-bit log-quant family (possibly
+randomized — see ``_leaf_codec``) — control flow is shared, only the
+codec choice differs. Per-leaf ranks come from each plan's
 :class:`~repro.core.compressors.LeafPolicy`; per-leaf wire bits sub-group a
 phase by codec (a uniform group stays ONE fused collective per phase).
 With ``cfg.fuse_collectives=True`` each phase's per-tensor gathers batch
@@ -43,7 +44,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core.codec import Float32Codec, WireCodec, codec_phase
+from repro.core.codec import WireCodec, codec_phase, make_codec
 from repro.core.compressors import (GradCompressor, LeafGroupHandler,
                                     LeafPlan, _group_by, _numel)
 from repro.core.low_rank import orthonormalize
@@ -78,15 +79,41 @@ class PowerSGDHandler(LeafGroupHandler):
     param_shaped = ("err",)
 
     # ---- the factor wire (overridden by LQ-SGD) --------------------------
-    def _codec(self, bits: int) -> WireCodec:
-        del bits
-        return Float32Codec()
+    def _leaf_codec(self, pl: LeafPlan, bits: int) -> WireCodec:
+        """The wire codec for one leaf's factor phase at ``bits`` — LQ-SGD
+        overrides with the (possibly randomized) log-quant family; codecs
+        compare equal across leaves with the same knobs, so phase
+        sub-grouping by codec keeps a uniform group ONE fused collective."""
+        del pl, bits
+        return make_codec("float32")
 
     def _leaf_bits_p(self, pl: LeafPlan) -> int:
         return 32
 
     def _leaf_bits_q(self, pl: LeafPlan) -> int:
         return 32
+
+    def _codec_p(self, pl: LeafPlan) -> WireCodec:
+        return self._leaf_codec(pl, self._leaf_bits_p(pl))
+
+    def _codec_q(self, pl: LeafPlan) -> WireCodec:
+        return self._leaf_codec(pl, self._leaf_bits_q(pl))
+
+    def _raw_needs_key(self, pl: LeafPlan) -> bool:
+        """Does the raw-route path for this leaf consume PRNG? (LQ-SGD
+        quantizes raw leaves too, so a randomized codec reaches them.)"""
+        del pl
+        return False
+
+    def group_needs_prng(self, plans) -> bool:
+        for pl in plans:
+            if pl.route == "lowrank":
+                if (self._codec_p(pl).requires_key
+                        or self._codec_q(pl).requires_key):
+                    return True
+            elif self._raw_needs_key(pl):
+                return True
+        return False
 
     # ---- state -----------------------------------------------------------
     def init_leaf_state(self, key, i, pl):
@@ -103,27 +130,55 @@ class PowerSGDHandler(LeafGroupHandler):
                 "q": q}
 
     # ---- one collective phase, sub-grouped by wire codec ------------------
-    def _phase(self, xs: list, flags: list, bits_list: list, comm, rec) -> list:
+    def _phase(self, xs: list, flags: list, codecs: list[WireCodec],
+               comm, rec, keys: list | None = None) -> list:
+        """Ship one factor phase; leaves sub-group by codec *instance*
+        (frozen dataclasses — equal knobs hash together, so a uniform
+        group stays ONE fused collective). ``keys`` is per-leaf PRNG, None
+        entries for deterministic codecs."""
         out: list = [None] * len(xs)
-        for bits, idxs in _group_by(range(len(xs)), lambda j: bits_list[j]):
+        for codec, idxs in _group_by(range(len(xs)), lambda j: codecs[j]):
+            ks = None
+            if keys is not None and codec.requires_key:
+                ks = [keys[j] for j in idxs]
             res = codec_phase([xs[j] for j in idxs],
                               [flags[j] for j in idxs],
-                              self._codec(bits), comm, rec,
-                              avg_mode=self.cfg.avg_mode, wire=self.cfg.wire,
-                              fuse=self.cfg.fuse_collectives)
+                              codec, comm, rec,
+                              avg_mode=self.cfg.avg_mode,
+                              wire=self.cfg.wire_accounting,
+                              fuse=self.cfg.fuse_collectives, keys=ks)
             for j, r in zip(idxs, res):
                 out[j] = r
         return out
 
     # ---- the group sync ---------------------------------------------------
+    # phase tags for per-leaf PRNG key derivation: a leaf's P/Q/raw streams
+    # must never collide (same base key, same leaf index)
+    _PHASE_P, _PHASE_Q, _PHASE_RAW = 0, 1, 2
+
+    def _leaf_key(self, base, i: int, phase: int):
+        """Per-(leaf, phase) PRNG key from the group's base key, or None
+        when the group carries no key (all-deterministic codecs)."""
+        if base is None:
+            return None
+        return jax.random.fold_in(jax.random.fold_in(base, i), phase)
+
     def sync_group(self, items, state, comm, rec):
         outs: dict[int, jax.Array] = {}
         new_err: dict[str, jax.Array] = {}
         new_q: dict[str, jax.Array] = {}
+        # derive the group base key only when some codec actually consumes
+        # randomness — deterministic configs keep a key-free state dict
+        base = (self._group_key(state, comm)
+                if self.group_needs_prng([pl for _, _, pl in items]) else None)
         comp = []
         for i, g, pl in items:
             if pl.route == "lowrank":
                 comp.append((i, g, pl))
+            elif self._raw_needs_key(pl):
+                outs[i] = self.sync_raw(
+                    g, pl, comm, rec,
+                    key=self._leaf_key(base, i, self._PHASE_RAW))
             else:
                 outs[i] = self.sync_raw(g, pl, comm, rec)
         if comp:
@@ -137,8 +192,10 @@ class PowerSGDHandler(LeafGroupHandler):
                 g_efs.append(g_ef)                                # Alg.1 l.4
                 ps.append(mm_p(g_ef, state["q"][str(i)]))         # Alg.1 l.10
             ps = self._phase(ps, flags,
-                             [self._leaf_bits_p(pl) for _, _, pl in comp],
-                             comm, rec)
+                             [self._codec_p(pl) for _, _, pl in comp],
+                             comm, rec,
+                             keys=[self._leaf_key(base, i, self._PHASE_P)
+                                   for i, _, _ in comp])
             # ---- orthonormalize + Q phase ----
             p_hats, qs = [], []
             for (_, mm_p, mm_q, orth, _), g_ef, p in zip(ops, g_efs, ps):
@@ -146,8 +203,10 @@ class PowerSGDHandler(LeafGroupHandler):
                 p_hats.append(p_hat)
                 qs.append(mm_q(g_ef, p_hat))                      # Alg.1 l.15
             qs = self._phase(qs, flags,
-                             [self._leaf_bits_q(pl) for _, _, pl in comp],
-                             comm, rec)
+                             [self._codec_q(pl) for _, _, pl in comp],
+                             comm, rec,
+                             keys=[self._leaf_key(base, i, self._PHASE_Q)
+                                   for i, _, _ in comp])
             # ---- reconstruct + error feedback ----
             for (i, g, pl), (_, _, _, _, recon), g_ef, p_hat, q_new in zip(
                     comp, ops, g_efs, p_hats, qs):
@@ -163,8 +222,8 @@ class PowerSGDHandler(LeafGroupHandler):
         numel = _numel(pl.shape)
         if pl.route != "lowrank":
             return self.raw_wire_bits(pl, numel)
-        cp = self._codec(self._leaf_bits_p(pl))
-        cq = self._codec(self._leaf_bits_q(pl))
+        cp = self._codec_p(pl)
+        cq = self._codec_q(pl)
         n, m = pl.mat_shape
         r = pl.eff_rank
         L = pl.shape[0] if pl.stacked else 1
@@ -172,16 +231,25 @@ class PowerSGDHandler(LeafGroupHandler):
                 + cq.wire_bits(L * m * r) + cq.scale_bits(L))  # Q (+ scales)
 
     def leaf_physical_bits(self, pl):
-        if pl.route != "lowrank" or self.cfg.wire != "psum_sim":
+        if pl.route != "lowrank" or self.cfg.wire_accounting != "psum_sim":
             return self.leaf_wire_bits(pl)
         # psum_sim ships both factors' codes as fp32 (scale pmaxes as-is)
-        cp = self._codec(self._leaf_bits_p(pl))
-        cq = self._codec(self._leaf_bits_q(pl))
+        cp = self._codec_p(pl)
+        cq = self._codec_q(pl)
         n, m = pl.mat_shape
         r = pl.eff_rank
         L = pl.shape[0] if pl.stacked else 1
         return (L * n * r * 32 + cp.scale_bits(L)
                 + L * m * r * 32 + cq.scale_bits(L))
+
+    def leaf_epsilon(self, pl, delta: float = 1e-5) -> float:
+        """Per-step privacy spend for one leaf: both factor phases (or the
+        raw route) must be randomized, else the leaf ships in the clear
+        and the spend is infinite."""
+        if pl.route == "lowrank":
+            return (self._codec_p(pl).epsilon_per_use(delta)
+                    + self._codec_q(pl).epsilon_per_use(delta))
+        return super().leaf_epsilon(pl, delta)
 
 
 class PowerSGDCompressor(GradCompressor):

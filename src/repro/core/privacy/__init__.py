@@ -1,15 +1,25 @@
 """Trustworthiness evaluation: gradient inversion + SSIM/PSNR (paper §V-C),
-and the trajectory harness distinguishing cold-start from steady-state
-leakage (threaded compressor state)."""
+the trajectory harness distinguishing cold-start from steady-state
+leakage (threaded compressor state), and DP accounting for the randomized
+wire codecs (:mod:`repro.core.privacy.accounting`)."""
+from repro.core.privacy.accounting import (PrivacyAccountant, TrainingBudget,
+                                           advanced_composition,
+                                           amplified_epsilon,
+                                           basic_composition, compose_training,
+                                           gaussian_epsilon, gaussian_sigma)
 from repro.core.privacy.gia import (GIAConfig, cosine_distance,
                                     invert_gradients,
                                     invert_gradients_batched,
                                     observed_gradient, total_variation)
 from repro.core.privacy.harness import (AttackPoint, HarnessConfig,
+                                        PostHocNoiseCompressor,
                                         run_attack_harness, sweep_methods)
 from repro.core.privacy.ssim import psnr, ssim
 
 __all__ = ["GIAConfig", "cosine_distance", "invert_gradients",
            "invert_gradients_batched", "observed_gradient",
            "total_variation", "ssim", "psnr", "AttackPoint", "HarnessConfig",
-           "run_attack_harness", "sweep_methods"]
+           "PostHocNoiseCompressor", "run_attack_harness", "sweep_methods",
+           "PrivacyAccountant", "TrainingBudget", "advanced_composition",
+           "amplified_epsilon", "basic_composition", "compose_training",
+           "gaussian_epsilon", "gaussian_sigma"]

@@ -36,15 +36,68 @@ import time
 from typing import Any, Callable, Mapping
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.privacy.gia import (GIAConfig, invert_gradients_batched,
                                     observed_gradient)
 from repro.core.privacy.ssim import psnr, ssim
 
-__all__ = ["HarnessConfig", "AttackPoint", "run_attack_harness",
-           "sweep_methods"]
+__all__ = ["HarnessConfig", "AttackPoint", "PostHocNoiseCompressor",
+           "run_attack_harness", "sweep_methods"]
 
 PyTree = Any
+
+
+class PostHocNoiseCompressor:
+    """The strawman the randomized codecs must beat: run a DETERMINISTIC
+    compressor, then add Gaussian noise to the decoded output.
+
+    At matched noise scale this spends the same epsilon as the in-codec
+    mechanism (``sigma_norm`` is the std in the normalized [-1, 1] domain,
+    scaled per leaf by max|g| post-decode) — but the noise lands AFTER
+    error feedback observed the clean reconstruction, and is not shaped by
+    the quantization grid, so reconstruction quality at equal epsilon is
+    strictly worse (the Pareto gate in ``benchmarks/check_regression.py``
+    holds the randomized codecs to dominating this baseline).
+
+    Duck-types the small surface the GIA harness drives (``init_state`` /
+    ``sync_once`` / ``privacy_epsilon_per_step``); not a wire method —
+    the noise is local, ships zero extra bits and no extra collectives.
+    """
+
+    def __init__(self, inner, sigma_norm: float):
+        if sigma_norm <= 0:
+            raise ValueError(f"sigma_norm must be > 0, got {sigma_norm}")
+        self.inner = inner
+        self.sigma_norm = float(sigma_norm)
+
+    def init_state(self, key: jax.Array) -> PyTree:
+        k_inner, k_noise = jax.random.split(key)
+        return {"inner": self.inner.init_state(k_inner),
+                "noise_key": k_noise,
+                "noise_step": jnp.zeros((), jnp.int32)}
+
+    def sync_once(self, grads: PyTree, state: PyTree, *, axis_name: str):
+        out, inner2, rec = self.inner.sync_once(grads, state["inner"],
+                                                axis_name=axis_name)
+        base = jax.random.fold_in(state["noise_key"], state["noise_step"])
+        leaves, treedef = jax.tree_util.tree_flatten(out)
+        noisy = []
+        for i, g in enumerate(leaves):
+            sigma = self.sigma_norm * jnp.max(jnp.abs(g))
+            noise = sigma * jax.random.normal(
+                jax.random.fold_in(base, i), g.shape, jnp.float32)
+            noisy.append((g.astype(jnp.float32) + noise).astype(g.dtype))
+        new_state = {"inner": inner2, "noise_key": state["noise_key"],
+                     "noise_step": state["noise_step"] + 1}
+        return jax.tree_util.tree_unflatten(treedef, noisy), new_state, rec
+
+    def privacy_epsilon_per_step(self, delta: float = 1e-5) -> float:
+        """Matched-epsilon bookkeeping: each leaf's noise is a Gaussian
+        mechanism at ``sigma_norm`` in the normalized domain."""
+        from repro.core.privacy.accounting import gaussian_epsilon
+        n_leaves = len(getattr(self.inner, "plans", [])) or 1
+        return n_leaves * gaussian_epsilon(self.sigma_norm, delta)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,6 +143,9 @@ class AttackPoint:
     state_threaded: bool  # compressor state evolved through t > 0 syncs
     seed_ssims: tuple[float, ...]
     attack_seconds: float = 0.0  # wall time of this point's batched attack
+    # victim's training loss at the END of the harness run (set when the
+    # caller passes loss_fn) — the accuracy axis of the privacy Pareto
+    final_loss: float | None = None
     x_hat: jax.Array | None = None
 
     @property
@@ -102,9 +158,13 @@ class AttackPoint:
 def run_attack_harness(grad_fn: Callable, params: PyTree, x: jax.Array,
                        y: jax.Array, compressor=None,
                        cfg: HarnessConfig = HarnessConfig(), *,
-                       method: str = "custom") -> list[AttackPoint]:
+                       method: str = "custom",
+                       loss_fn: Callable | None = None) -> list[AttackPoint]:
     """Train the victim for ``cfg.train_steps`` steps (applying the synced
-    gradient, threading compressor state) and attack each snapshot."""
+    gradient, threading compressor state) and attack each snapshot.
+    ``loss_fn(params, x, y)`` (optional) is evaluated once after training
+    and stamped on every point as ``final_loss`` — the utility axis the
+    privacy Pareto trades against SSIM."""
     key = jax.random.PRNGKey(cfg.seed)
     comp_state = (compressor.init_state(key) if compressor is not None
                   else None)
@@ -116,6 +176,8 @@ def run_attack_harness(grad_fn: Callable, params: PyTree, x: jax.Array,
             snaps[t] = (params, g_obs)
         params = jax.tree.map(
             lambda p, g: p - cfg.victim_lr * g.astype(p.dtype), params, g_obs)
+    final_loss = (float(loss_fn(params, x, y)) if loss_fn is not None
+                  else None)
 
     points = []
     for t in sorted(snaps):
@@ -134,23 +196,32 @@ def run_attack_harness(grad_fn: Callable, params: PyTree, x: jax.Array,
             psnr=float(psnr(x, x_hats[best])),
             attack_loss=float(losses[best]),
             state_threaded=(compressor is not None and t > 0),
-            seed_ssims=tuple(ssims), attack_seconds=secs, x_hat=x_hats[best]))
+            seed_ssims=tuple(ssims), attack_seconds=secs,
+            final_loss=final_loss, x_hat=x_hats[best]))
     return points
 
 
 def sweep_methods(methods: Mapping[str, Any], grad_fn: Callable,
                   params: PyTree, x: jax.Array, y: jax.Array,
-                  cfg: HarnessConfig = HarnessConfig()) -> list[AttackPoint]:
-    """Run the harness for every ``{name: CompressorConfig | None}`` entry
-    (None = uncompressed SGD), building each compressor against the model's
-    abstract gradient pytree. Every method starts from the same ``params``
-    and attacks the same schedule, so (method, step) cells are comparable."""
+                  cfg: HarnessConfig = HarnessConfig(), *,
+                  loss_fn: Callable | None = None) -> list[AttackPoint]:
+    """Run the harness for every ``{name: entry}`` in ``methods``, where
+    entry is a ``CompressorConfig``, ``None`` (uncompressed SGD), or a
+    callable ``abstract_grads -> compressor`` (wrapper baselines like
+    :class:`PostHocNoiseCompressor`). Every method starts from the same
+    ``params`` and attacks the same schedule, so (method, step) cells are
+    comparable."""
     from repro.core.compressors import make_compressor
 
     abstract = jax.eval_shape(grad_fn, params, x, y)
     points = []
     for name, cc in methods.items():
-        comp = None if cc is None else make_compressor(cc, abstract)
+        if cc is None:
+            comp = None
+        elif callable(cc):
+            comp = cc(abstract)
+        else:
+            comp = make_compressor(cc, abstract)
         points.extend(run_attack_harness(grad_fn, params, x, y, comp, cfg,
-                                         method=name))
+                                         method=name, loss_fn=loss_fn))
     return points

@@ -241,7 +241,11 @@ def main() -> None:
                     help="in-graph full-precision warm-up steps")
     ap.add_argument("--rank", type=int, default=1)
     ap.add_argument("--bits", type=int, default=8)
-    ap.add_argument("--wire", default="allgather_codes",
+    # --wire here historically meant the ACCOUNTING mode while train.py's
+    # --wire means topology (the PR-9 collision); canonical name now
+    # matches CompressorConfig.wire_accounting, old spelling kept as alias
+    ap.add_argument("--wire-accounting", "--wire", "--wire-mode",
+                    dest="wire_accounting", default="allgather_codes",
                     choices=["allgather_codes", "psum_sim"])
     ap.add_argument("--avg-mode", default="paper",
                     choices=["paper", "dequant_then_mean"])
@@ -272,7 +276,8 @@ def main() -> None:
     args = ap.parse_args()
 
     comp_cfg = CompressorConfig(name=args.compressor, rank=args.rank,
-                                bits=args.bits, wire=args.wire,
+                                bits=args.bits,
+                                wire_accounting=args.wire_accounting,
                                 avg_mode=args.avg_mode,
                                 state_dtype=args.comp_dtype,
                                 fuse_collectives=args.fuse,

@@ -108,10 +108,22 @@ def main() -> None:
                     help="federated non-IID data: Dirichlet concentration "
                          "reshaping each DP worker's token prior (0 = "
                          "IID; smaller = more skew)")
-    ap.add_argument("--wire-mode", default="allgather_codes",
+    ap.add_argument("--wire-accounting", "--wire-mode",
+                    dest="wire_accounting", default="allgather_codes",
                     choices=["allgather_codes", "psum_sim"],
                     help="wire modelling: exact packed code gather, or "
-                         "the psum-simulated ring all-reduce")
+                         "the psum-simulated ring all-reduce (--wire-mode "
+                         "is the pre-rename alias)")
+    ap.add_argument("--codec", default=None,
+                    help="wire codec override for lq_sgd leaves: 'log' "
+                         "(deterministic), 'dlog' (dithered/DP), 'lrq' "
+                         "(layered randomized); default picks by "
+                         "--dp-epsilon")
+    ap.add_argument("--dp-epsilon", type=float, default=0.0,
+                    help="per-use DP budget per transmitted tensor; > 0 "
+                         "calibrates dlog noise (see "
+                         "repro.core.privacy.accounting)")
+    ap.add_argument("--dp-delta", type=float, default=1e-5)
     ap.add_argument("--avg-mode", default="paper")
     ap.add_argument("--fuse", action="store_true")
     ap.add_argument("--comp-dtype", default="float32")
@@ -151,7 +163,11 @@ def main() -> None:
     decay = parse_decay_spec(args.decay) if args.decay else ()
     comp_cfg = CompressorConfig(name=args.compressor, rank=args.rank,
                                 bits=args.bits, alpha=args.alpha,
-                                wire=args.wire_mode, avg_mode=args.avg_mode,
+                                wire_accounting=args.wire_accounting,
+                                avg_mode=args.avg_mode,
+                                codec=args.codec,
+                                dp_epsilon=args.dp_epsilon,
+                                dp_delta=args.dp_delta,
                                 fuse_collectives=args.fuse,
                                 state_dtype=args.comp_dtype,
                                 policy=args.policy or cfg.compression_policy,

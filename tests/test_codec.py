@@ -215,7 +215,7 @@ def test_topk_accounting_is_sparse_in_both_wire_modes(wire):
     charge TopK's dense fp32 simulation instead of the k*64 sparse payload."""
     grads = _grads(jax.random.PRNGKey(31))
     recs = []
-    comp, _, _ = _sync("topk", grads, wire=wire, collect_recs=recs,
+    comp, _, _ = _sync("topk", grads, wire_accounting=wire, collect_recs=recs,
                        topk_ratio=0.01)
     assert recs[0].bits_sent == comp.wire_bits_per_step()
 
@@ -230,7 +230,8 @@ def test_psum_sim_accounting_matches_allgather(bits):
     grads = {"w": jax.random.normal(jax.random.PRNGKey(32), (N, 33, 35))}
     bits_by_mode = {}
     for wire in ("allgather_codes", "psum_sim"):
-        cfg = CompressorConfig(name="lq_sgd", rank=1, bits=bits, wire=wire)
+        cfg = CompressorConfig(name="lq_sgd", rank=1, bits=bits,
+                               wire_accounting=wire)
         comp = make_compressor(cfg, _abstract(grads), {"w": False})
         state = broadcast_state(comp.init_state(jax.random.PRNGKey(42)), N)
         recs = []

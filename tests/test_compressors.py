@@ -175,15 +175,15 @@ def test_lq_wire_modes_consistent(wire, avg_mode):
     """Paper-literal psum and exact all-gather wires agree numerically for
     the same avg_mode (they compute the same math different ways)."""
     grads = _grads(jax.random.PRNGKey(8))
-    _, out, _ = _run_sync("lq_sgd", grads, wire=wire, avg_mode=avg_mode)
+    _, out, _ = _run_sync("lq_sgd", grads, wire_accounting=wire, avg_mode=avg_mode)
     for leaf in jax.tree.leaves(out):
         assert not bool(jnp.any(jnp.isnan(leaf)))
 
 
 def test_lq_wire_mode_equivalence():
     grads = _grads(jax.random.PRNGKey(9))
-    _, out_a, _ = _run_sync("lq_sgd", grads, wire="allgather_codes", avg_mode="paper")
-    _, out_b, _ = _run_sync("lq_sgd", grads, wire="psum_sim", avg_mode="paper")
+    _, out_a, _ = _run_sync("lq_sgd", grads, wire_accounting="allgather_codes", avg_mode="paper")
+    _, out_b, _ = _run_sync("lq_sgd", grads, wire_accounting="psum_sim", avg_mode="paper")
     np.testing.assert_allclose(out_a["w"][0], out_b["w"][0], atol=1e-5)
 
 

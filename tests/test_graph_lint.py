@@ -35,8 +35,8 @@ STACKED = {"w": False, "b": False, "scan": True}
 def _composite(method="lq_sgd", *, thresh=1.5, mode="elide", warmup=0,
                wire="allgather_codes", fuse=True):
     cfg = CompressorConfig(name=method, rank=2, bits=8, topk_ratio=0.1,
-                           fuse_collectives=fuse, lazy_mode=mode, wire=wire,
-                           warmup_steps=warmup)
+                           fuse_collectives=fuse, lazy_mode=mode,
+                           wire_accounting=wire, warmup_steps=warmup)
     pols = [LeafPolicy(method=method, rank=2, topk_ratio=0.1,
                        lazy_thresh=thresh, max_stale=4)] * 3
     return CompositeCompressor(cfg, GRADS, STACKED, policies=pols,

@@ -1,0 +1,437 @@
+"""Property suite for the randomized privacy codecs and the codec registry.
+
+The contracts PR 10's API redesign must hold:
+  * registry: every codec builds through ``make_codec`` (spec strings,
+    knob validation, loud failures), ``make_wire_codec`` stays a shim;
+  * PRNG contract: randomized codecs demand the keyword-only ``key``,
+    deterministic codecs reject one (a dropped key is a silent repro bug);
+  * unbiasedness: E over keys of expand(codes(x)) == x in the VALUE
+    domain for ``dlog`` (dither) and ``lrq`` (layer mixture);
+  * zero noise == deterministic, bit for bit: the noiseless configs of
+    ``dlog``/``lrq`` produce byte-identical wires and syncs to ``log``,
+    fused and unfused;
+  * accounting: closed-form Gaussian calibration, composition bounds and
+    the inf-poisoned ledger;
+  * config surface: ``CompressorConfig.wire`` warns but works (and
+    ``dataclasses.replace`` does not resurrect it), privacy knobs route
+    to the composite, the auto-planner reports epsilon rows.
+"""
+import dataclasses
+import math
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AxisComm, CompressorConfig, make_compressor
+from repro.core.codec import (
+    DitheredLogQuantCodec,
+    Float32Codec,
+    LayeredRandQuantCodec,
+    LogQuantCodec,
+    QSGDCodec,
+    available_codecs,
+    codec_phase,
+    make_codec,
+    make_wire_codec,
+    register_codec,
+)
+from repro.core.comm import CommRecord
+from repro.core.composite import CompositeCompressor
+from repro.core.policy import plan_auto
+from repro.core.privacy.accounting import (
+    PrivacyAccountant,
+    advanced_composition,
+    amplified_epsilon,
+    basic_composition,
+    compose_training,
+    gaussian_epsilon,
+    gaussian_sigma,
+)
+
+from conftest import broadcast_state
+
+STACKED = {"w": False, "b": False}
+ABSTRACT = {
+    "w": jax.ShapeDtypeStruct((64, 32), jnp.float32),
+    "b": jax.ShapeDtypeStruct((32,), jnp.float32),
+}
+
+
+# ------------------------------------------------------------- the registry
+
+def test_available_codecs_lists_all_five():
+    assert {"float32", "log", "qsgd", "dlog", "lrq"} <= set(available_codecs())
+
+
+def test_make_codec_spec_string_parses_knobs():
+    c = make_codec("dlog:bits=4,dp_epsilon=8,dither=False")
+    assert isinstance(c, DitheredLogQuantCodec)
+    assert (c.bits, c.dp_epsilon, c.dither) == (4, 8, False)
+
+
+def test_make_codec_kwargs_override_inline():
+    c = make_codec("log:bits=4", bits=16)
+    assert c.bits == 16
+
+
+def test_make_codec_unknown_name_lists_options():
+    with pytest.raises(ValueError, match="unknown codec 'nope'.*available"):
+        make_codec("nope")
+
+
+def test_make_codec_unknown_knob_fails_loudly():
+    with pytest.raises(ValueError, match="does not accept knob.*frobnicate"):
+        make_codec("log", frobnicate=3)
+    # dp_epsilon is a dlog knob, not a log one — typo'd specs fail too
+    with pytest.raises(ValueError, match="does not accept"):
+        make_codec("log:dp_epsilon=8")
+
+
+def test_make_codec_bad_spec_item():
+    with pytest.raises(ValueError, match="bad codec spec item"):
+        make_codec("log:bits")
+
+
+def test_register_codec_rejects_duplicate_names():
+    with pytest.raises(ValueError, match="already registered"):
+        register_codec("log")(LogQuantCodec)
+
+
+def test_codec_name_is_stamped_by_registry():
+    assert make_codec("dlog").codec_name == "dlog"
+    assert make_codec("float32").codec_name == "float32"
+
+
+def test_make_wire_codec_legacy_shim():
+    assert make_wire_codec("log", bits=4) == make_codec("log", bits=4)
+    assert isinstance(make_wire_codec("float32"), Float32Codec)
+    assert isinstance(make_wire_codec("qsgd", bits=8), QSGDCodec)
+    with pytest.raises(ValueError, match="unknown codec kind"):
+        make_wire_codec("dlog")  # new names go through make_codec
+
+
+# --------------------------------------------------------- the PRNG contract
+
+@pytest.mark.parametrize("spec", ["float32", "log",
+                                  "dlog:dither=False",
+                                  "lrq:n_layers=1,dither=False"])
+def test_deterministic_codecs_reject_keys(spec):
+    c = make_codec(spec)
+    assert not c.requires_key
+    x = jnp.ones((8,)) * 0.5
+    with pytest.raises(ValueError, match="deterministic.*rejects a PRNG key"):
+        c.codes(x, key=jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="deterministic"):
+        c.encode(x, key=jax.random.PRNGKey(0))
+
+
+@pytest.mark.parametrize("spec", ["qsgd", "dlog", "dlog:dither=False,dp_epsilon=4",
+                                  "lrq", "lrq:n_layers=3,bits=8"])
+def test_randomized_codecs_demand_keys(spec):
+    c = make_codec(spec)
+    assert c.requires_key
+    x = jnp.ones((8,)) * 0.5
+    with pytest.raises(ValueError, match="randomized.*needs a PRNG key"):
+        c.codes(x)
+    with pytest.raises(ValueError, match="randomized"):
+        c.encode(x)
+
+
+def test_lrq_layers_without_dither_is_rejected():
+    # deterministic rounding onto a random layer is biased — hard error
+    with pytest.raises(ValueError, match="requires dither=True"):
+        make_codec("lrq", n_layers=2, dither=False)
+    with pytest.raises(ValueError, match="n_layers"):
+        make_codec("lrq", n_layers=9, bits=8)
+
+
+# ----------------------------------------------------- unbiasedness over keys
+
+def _mean_reconstruction(codec, x, n_keys):
+    keys = jax.random.split(jax.random.PRNGKey(7), n_keys)
+    recon = jax.vmap(lambda k: codec.expand(
+        codec.codes(x, key=k).astype(jnp.float32)))(keys)
+    return jnp.mean(recon, axis=0)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_dlog_dither_unbiased_over_keys(bits):
+    """E over keys of expand(codes(x)) == x: stochastic rounding is
+    unbiased in the value domain (NOT the log domain — Jensen)."""
+    x = jnp.linspace(-0.9, 0.9, 41)
+    mean = _mean_reconstruction(make_codec("dlog", bits=bits), x, 3000)
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(x), atol=0.02)
+
+
+@pytest.mark.parametrize("n_layers", [1, 2, 3])
+def test_lrq_unbiased_over_keys(n_layers):
+    """The layer mixture stays unbiased: every layer's rounding is
+    value-domain unbiased, so the uniform mixture is too."""
+    x = jnp.linspace(-0.85, 0.85, 35)
+    codec = make_codec("lrq", bits=6, n_layers=n_layers)
+    mean = _mean_reconstruction(codec, x, 4000)
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(x), atol=0.04)
+
+
+def test_lrq_noise_grows_with_layers():
+    # the declared mechanism: more layers -> wider output distribution
+    sig = [make_codec("lrq", bits=8, n_layers=n).privacy_sigma()
+           for n in (1, 2, 3)]
+    assert sig[0] < sig[1] < sig[2]
+    eps = [make_codec("lrq", bits=8, n_layers=n).epsilon_per_use(1e-5)
+           for n in (2, 3)]
+    assert eps[1] < eps[0]  # more noise, tighter epsilon
+
+
+# ------------------------------------------- zero noise == log, bit for bit
+
+ZERO_NOISE = [
+    pytest.param("dlog:dither=False", id="dlog0"),
+    pytest.param("lrq:n_layers=1,dither=False", id="lrq0"),
+]
+
+
+@pytest.mark.parametrize("spec", ZERO_NOISE)
+@pytest.mark.parametrize("bits", [4, 8])
+def test_zero_noise_wire_is_bit_identical_to_log(spec, bits):
+    x = jax.random.normal(jax.random.PRNGKey(3), (257,)) * 0.3
+    det, log = make_codec(spec, bits=bits), make_codec("log", bits=bits)
+    np.testing.assert_array_equal(np.asarray(det.encode(x)),
+                                  np.asarray(log.encode(x)))
+    np.testing.assert_array_equal(np.asarray(det.codes(x)),
+                                  np.asarray(log.codes(x)))
+
+
+@pytest.mark.parametrize("spec", ZERO_NOISE)
+@pytest.mark.parametrize("fuse", [False, True], ids=["unfused", "fused"])
+def test_zero_noise_codec_phase_bit_identical(spec, fuse):
+    """The whole collective phase — scale pmax, encode, gather, decode,
+    average — is byte-for-byte the deterministic 'log' path, fused and
+    unfused, when the randomized codecs are configured noiseless."""
+    grads = {k: jax.random.normal(jax.random.PRNGKey(11), (4,) + s)
+             for k, s in [("a", (48, 16)), ("b", (31,))]}
+
+    def run(codec):
+        def worker(ga, gb):
+            return codec_phase([ga, gb], [False, False], codec,
+                               AxisComm(("data",)), CommRecord(), fuse=fuse)
+
+        return jax.vmap(worker, axis_name="data")(grads["a"], grads["b"])
+
+    out_det = run(make_codec(spec, bits=4))
+    out_log = run(make_codec("log", bits=4))
+    for a, b in zip(out_det, out_log):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_zero_noise_configs_are_deterministic_objects():
+    for spec in ["dlog:dither=False", "lrq:n_layers=1,dither=False"]:
+        c = make_codec(spec)
+        assert not c.requires_key
+        assert c.privacy_sigma() == 0.0
+        assert math.isinf(c.epsilon_per_use(1e-5))
+        assert c.epsilon_kind is None
+
+
+def test_dlog_same_key_same_bytes_different_key_different_bytes():
+    x = jax.random.normal(jax.random.PRNGKey(5), (512,)) * 0.4
+    c = make_codec("dlog", bits=8, dp_epsilon=8.0)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(c.encode(x, key=k1)),
+                                  np.asarray(c.encode(x, key=k1)))
+    assert not np.array_equal(np.asarray(c.encode(x, key=k1)),
+                              np.asarray(c.encode(x, key=k2)))
+
+
+@pytest.mark.parametrize("spec", ["dlog:dp_epsilon=16", "lrq:n_layers=2"])
+def test_randomized_wire_bits_match_log(spec):
+    # same container, same accounting: privacy costs zero extra bytes
+    for bits in (4, 8):
+        c = make_codec(spec, bits=bits)
+        log = make_codec("log", bits=bits)
+        for numel in (1, 7, 256, 1001):
+            assert c.wire_bits(numel) == log.wire_bits(numel)
+
+
+# ------------------------------------------------------- accounting closed form
+
+def test_gaussian_sigma_epsilon_roundtrip():
+    for eps in (0.5, 1.0, 8.0, 64.0):
+        sigma = gaussian_sigma(eps, 1e-5)
+        assert gaussian_epsilon(sigma, 1e-5) == pytest.approx(eps, rel=1e-12)
+    # closed form at the default sensitivity 2.0
+    assert gaussian_sigma(1.0, 1e-5) == pytest.approx(
+        2.0 * math.sqrt(2.0 * math.log(1.25e5)), rel=1e-12)
+
+
+def test_gaussian_edge_cases():
+    assert math.isinf(gaussian_epsilon(0.0, 1e-5))
+    with pytest.raises(ValueError):
+        gaussian_sigma(0.0, 1e-5)
+    with pytest.raises(ValueError):
+        gaussian_sigma(1.0, 2.0)  # delta outside (0, 1)
+    with pytest.raises(ValueError):
+        gaussian_epsilon(-1.0, 1e-5)
+
+
+def test_composition_bounds():
+    assert basic_composition(0.1, 100) == pytest.approx(10.0)
+    # advanced: closed form, and it beats basic for small eps / many steps
+    eps, steps, slack = 0.05, 2000, 1e-6
+    adv = advanced_composition(eps, steps, slack)
+    assert adv == pytest.approx(
+        math.sqrt(2 * steps * math.log(1 / slack)) * eps
+        + steps * eps * math.expm1(eps), rel=1e-12)
+    assert adv < basic_composition(eps, steps)
+    assert advanced_composition(eps, 0, slack) == 0.0
+    assert math.isinf(advanced_composition(math.inf, 3, slack))
+
+
+def test_amplified_epsilon():
+    assert amplified_epsilon(1.0, 1.0) == 1.0
+    q = 0.01
+    assert amplified_epsilon(1.0, q) == pytest.approx(
+        math.log1p(q * math.expm1(1.0)), rel=1e-12)
+    assert amplified_epsilon(1.0, q) < 1.0
+    with pytest.raises(ValueError):
+        amplified_epsilon(1.0, 0.0)
+
+
+def test_compose_training_budget():
+    b = compose_training(0.02, 5000, delta=1e-6, sampling_rate=0.1)
+    assert b.epsilon_per_step == amplified_epsilon(0.02, 0.1)
+    assert b.epsilon_basic == pytest.approx(5000 * b.epsilon_per_step)
+    assert b.epsilon == min(b.epsilon_basic, b.epsilon_advanced)
+    assert b.delta_total == pytest.approx(5000 * 0.1 * 1e-6 + 1e-6)
+
+
+def test_accountant_ledger_and_inf_poisoning():
+    acc = PrivacyAccountant(delta=1e-5)
+    acc.spend(0.1, times=10)
+    acc.spend(0.5)
+    assert acc.n_uses == 11
+    assert acc.total_basic() == pytest.approx(1.5)
+    assert acc.total_advanced() <= acc.total_basic()
+    # one deterministic message destroys the guarantee
+    acc.spend(math.inf)
+    assert math.isinf(acc.total_basic())
+    assert math.isinf(acc.total_advanced())
+    with pytest.raises(ValueError):
+        acc.spend(-1.0)
+
+
+def test_dlog_epsilon_is_the_calibrated_budget():
+    c = make_codec("dlog", dp_epsilon=8.0, dp_delta=1e-6)
+    assert c.epsilon_per_use() == 8.0
+    assert c.epsilon_kind == "calibrated"
+    assert c.privacy_sigma() == pytest.approx(gaussian_sigma(8.0, 1e-6))
+
+
+# ------------------------------------------- config surface + routing
+
+def test_config_wire_kwarg_warns_but_works():
+    with pytest.warns(DeprecationWarning, match="wire_accounting"):
+        cfg = CompressorConfig(name="lq_sgd", wire="psum_sim")
+    assert cfg.wire_accounting == "psum_sim"
+    assert cfg.wire == "psum_sim"  # read shim, no warning
+
+
+def test_replace_does_not_resurrect_deprecated_wire():
+    """py3.10 dataclasses.replace round-trips every init field — including
+    the deprecated InitVar through the read shim. The shim must not let
+    the old value clobber an explicit wire_accounting= change."""
+    cfg = CompressorConfig(name="lq_sgd")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        cfg2 = dataclasses.replace(cfg, wire_accounting="psum_sim")
+    assert cfg2.wire_accounting == "psum_sim"
+    # and a plain replace keeps the original value, silently
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        cfg3 = dataclasses.replace(cfg, bits=4)
+    assert cfg3.wire_accounting == "allgather_codes"
+
+
+def test_privacy_knobs_route_to_composite():
+    det = make_compressor(CompressorConfig(name="lq_sgd"), ABSTRACT, STACKED)
+    assert not isinstance(det, CompositeCompressor)
+    for kw in ({"dp_epsilon": 8.0}, {"codec": "lrq"}):
+        comp = make_compressor(CompressorConfig(name="lq_sgd", **kw),
+                               ABSTRACT, STACKED)
+        assert isinstance(comp, CompositeCompressor)
+
+
+def test_composite_state_key_only_when_randomized():
+    det = make_compressor(CompressorConfig(name="lq_sgd", lazy_thresh=0.1),
+                          ABSTRACT, STACKED)
+    assert "key" not in det.init_state(jax.random.PRNGKey(0))
+    rnd = make_compressor(CompressorConfig(name="lq_sgd", dp_epsilon=8.0),
+                          ABSTRACT, STACKED)
+    assert "key" in rnd.init_state(jax.random.PRNGKey(0))
+
+
+def test_composite_privacy_epsilon_per_step():
+    rnd = make_compressor(CompressorConfig(name="lq_sgd", dp_epsilon=8.0),
+                          ABSTRACT, STACKED)
+    eps = rnd.privacy_epsilon_per_step(1e-5)
+    assert math.isfinite(eps) and eps > 0
+    det = make_compressor(CompressorConfig(name="lq_sgd", lazy_thresh=0.1),
+                          ABSTRACT, STACKED)
+    assert math.isinf(det.privacy_epsilon_per_step(1e-5))
+
+
+def test_randomized_sync_differs_by_step_and_zero_eps_matches_det():
+    """End to end through the composite: the dp_epsilon=0 + codec=None
+    config syncs bit-identically to the plain compressor, and a dp run
+    draws fresh noise each step (state['step'] advances the stream)."""
+    grads = {k: jax.random.normal(jax.random.PRNGKey(1), (4,) + v.shape)
+             for k, v in ABSTRACT.items()}
+
+    def sync_twice(cfg):
+        comp = make_compressor(cfg, ABSTRACT, STACKED)
+        state = broadcast_state(comp.init_state(jax.random.PRNGKey(42)), 4)
+
+        def worker(g, st):
+            out, st2, _ = comp.sync(g, st, AxisComm(("data",)))
+            return out, st2
+
+        wf = jax.jit(jax.vmap(worker, axis_name="data"))
+        out1, state = wf(grads, state)
+        out2, _ = wf(grads, state)
+        return out1, out2
+
+    d1, d2 = sync_twice(CompressorConfig(name="lq_sgd", dp_epsilon=8.0))
+    # same grads, new step -> fresh noise -> different synced values
+    assert not np.allclose(np.asarray(d1["w"]), np.asarray(d2["w"]))
+    p1, _ = sync_twice(CompressorConfig(name="lq_sgd"))
+    assert not np.allclose(np.asarray(d1["w"]), np.asarray(p1["w"]))
+
+
+def test_plan_auto_trades_privacy_noise_and_reports_epsilon():
+    """The planner treats the DP noise as error: a loose budget (large
+    epsilon -> small sigma) admits the privacy codec and the report rows
+    carry the epsilon column; a tight one (small epsilon -> sigma above
+    the error budget) routes those leaves to noiseless methods instead."""
+    opts = dict(ranks=(1,), bits_options=(8,), topk_ratios=(), qsgd_bits=())
+
+    def plan(eps):
+        cfg = CompressorConfig(name="lq_sgd", policy="auto", dp_epsilon=eps)
+        return plan_auto(ABSTRACT, STACKED, cfg=cfg, **opts)
+
+    pols, rep = plan(64.0)  # sigma ~0.15, inside the default budget
+    by_path = {r["path"]: r for r in rep}
+    row = by_path["['b']"]  # raw-route leaf: lq_sgd's quantized raw path
+    assert (row["method"], row["codec"], row["epsilon"]) == ("lq_sgd", "dlog", 64.0)
+    assert any(p.codec == "dlog" and p.dp_epsilon == 64.0 for p in pols)
+
+    _, rep_tight = plan(8.0)  # sigma ~1.2 >> error budget: no codec fits
+    assert all(r["epsilon"] is None for r in rep_tight)
+    assert all(r["method"] != "lq_sgd" for r in rep_tight)
+
+    # no privacy knobs -> the epsilon column stays empty
+    _, rep0 = plan_auto(ABSTRACT, STACKED,
+                        cfg=CompressorConfig(name="lq_sgd", policy="auto"))
+    assert all(r["epsilon"] is None for r in rep0)
